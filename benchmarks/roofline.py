@@ -1,0 +1,149 @@
+"""§Roofline — assemble the three-term roofline per (arch × shape × mesh).
+
+Sources:
+  * compute / memory terms: analytic counts (benchmarks/counts.py) that mirror
+    the executed program (XLA cost_analysis undercounts while-loop bodies; its
+    per-body value is kept as the `xla_body_flops` cross-check),
+  * collective term: loop-aware HLO parse from the compiled dry-run artifact
+    (results/dryrun/*.json, field collective_bytes_per_device.total),
+  * hardware: v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Roofline fraction = useful_time / bound_time where useful_time =
+MODEL_FLOPS/(chips·peak) and bound_time = max(compute, memory, collective).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+# NOTE: never import repro.launch.dryrun here — importing it sets the
+# 512-device XLA_FLAGS override, which must stay confined to the dry-run.
+from repro.configs import SHAPES
+from repro.core.estimator import V5E
+
+from benchmarks.counts import cell_counts
+
+__all__ = ["build_roofline", "format_table", "main"]
+
+_MESH_SHAPES = {
+    "single_pod": {"data": 16, "model": 16},
+    "multi_pod": {"pod": 2, "data": 16, "model": 16},
+}
+
+
+def _advice(dom: str, row: dict) -> str:
+    if dom == "compute":
+        if row["useful_ratio"] < 0.55:
+            return ("compute-bound with low useful ratio: cut masked attention "
+                    "tiles (wedge schedule / Pallas flash) and remat scope")
+        return "compute-bound: larger per-chip batch or quantized matmuls"
+    if dom == "memory":
+        return ("memory-bound: fuse attention/softmax (VMEM-resident), "
+                "quantize weights/KV (int8), raise arithmetic intensity "
+                "with bigger microbatches")
+    return ("collective-bound: overlap collectives with compute, shard to cut "
+            "cross-device traffic (ZeRO/reduce-scatter), int8-compress "
+            "cross-pod grads")
+
+
+def build_roofline(dryrun_dir: str = "results/dryrun",
+                   mesh_name: str = "single_pod", *,
+                   overrides: dict | None = None) -> list:
+    """Rows for every ok cell of one mesh.  ``overrides`` maps
+    (arch, shape) -> kwargs for cell_counts (perf-iteration knobs)."""
+    mesh_shape = _MESH_SHAPES[mesh_name]
+    prefix = "sp" if mesh_name == "single_pod" else "mp"
+    # build configs against the production mesh geometry without touching
+    # device state: dryrun_cfg only needs the axis sizes
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, f"{prefix}_*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            if rec.get("status") == "skipped":
+                rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                             "mesh": mesh_name, "status": "skipped",
+                             "reason": rec.get("reason", "")})
+            continue
+        arch, shape = rec["arch"], rec["shape"]
+        cell = SHAPES[shape]
+        cfg = _cfg_for(arch, mesh_shape, opt=rec.get("opt", False),
+                       kind=cell.kind)
+        kw = dict(microbatches=rec.get("microbatches", 1))
+        if overrides and (arch, shape) in overrides:
+            kw.update(overrides[(arch, shape)])
+        cc = cell_counts(cfg, cell, mesh_shape, **kw)
+
+        chips = rec["n_devices"]
+        t_comp = cc.flops_per_device / V5E.peak_flops
+        t_mem = cc.hbm_bytes_per_device / V5E.hbm_bw
+        coll_total = rec["collective_bytes_per_device"]["total"]
+        t_coll = coll_total / V5E.ici_bw
+        terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+        dom = max(terms, key=terms.get)
+        bound = terms[dom]
+        useful_t = cc.model_flops_global / (chips * V5E.peak_flops)
+        row = {
+            "arch": arch, "shape": shape, "mesh": mesh_name, "status": "ok",
+            "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+            "dominant": dom,
+            "bound_s": bound,
+            "model_flops_global": cc.model_flops_global,
+            "exec_flops_global": cc.flops_per_device * chips,
+            "useful_ratio": cc.model_flops_global
+            / max(cc.flops_per_device * chips, 1.0),
+            "roofline_fraction": useful_t / max(bound, 1e-30),
+            "xla_body_flops_per_device": rec.get("flops_per_device"),
+            "collective_bytes_per_device": coll_total,
+            "hbm_gb_per_device": cc.hbm_bytes_per_device / 1e9,
+            "params_gb_per_device": cc.params_bytes_per_device / 1e9,
+            "temp_gb_per_device": (rec.get("memory") or {}).get(
+                "temp_bytes", 0) / 1e9,
+            "microbatches": rec.get("microbatches", 1),
+        }
+        row["advice"] = _advice(dom, row)
+        rows.append(row)
+    return rows
+
+
+def _cfg_for(arch: str, mesh_shape: dict, *, opt: bool = False,
+             kind: str = "train"):
+    from repro.launch.optconfig import build_cfg
+    return build_cfg(arch, mesh_shape, opt=opt, kind=kind)
+
+
+def format_table(rows: list) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'comp(s)':>9s} {'mem(s)':>9s} "
+           f"{'coll(s)':>9s} {'dom':>6s} {'useful':>7s} {'roofl%':>7s}")
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"{r['arch']:22s} {r['shape']:12s} "
+                       f"{'— skipped (' + r['reason'][:40] + ')':s}")
+            continue
+        out.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['t_compute_s']:9.4f} "
+            f"{r['t_memory_s']:9.4f} {r['t_collective_s']:9.4f} "
+            f"{r['dominant'][:6]:>6s} {r['useful_ratio']:7.2f} "
+            f"{100*r['roofline_fraction']:6.1f}%")
+    return "\n".join(out)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single_pod",
+                    choices=["single_pod", "multi_pod"])
+    ap.add_argument("--out", default="results/roofline.json")
+    args = ap.parse_args()
+    rows = build_roofline(args.dryrun_dir, args.mesh)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(format_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,192 @@
+"""Benchmark harness — one section per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).  Sections:
+  table1   — motivation: per-block time variety (mean/var/CoV) per app
+  fig6-10  — energy & time, DV-DVFS vs DVO, 5 apps (paper-faithful CPU power
+             model AND the TPU-adapted model), firm deadline
+  fig11-12 — Zipf sensitivity z ∈ {0,1,2}
+  fig13    — tight vs firm deadline
+  planners — paper vs global vs roofline planner on the same workload
+  roofline — summary of results/roofline_sp.json (built from the dry-run)
+  train    — tiny end-to-end LM training with the DV-DVFS controller
+  serve    — batched decode with roofline-planned windows
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _row(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def bench_table1():
+    from benchmarks.paper_figs import motivation_table
+    tab = motivation_table()
+    for app, row in tab.items():
+        _row(f"table1_{app}", row["mean_ms"] * 1e3,
+             f"cov={row['cov']:.3f};var={row['variance']:.3f}")
+    return tab
+
+
+def bench_fig6_10():
+    from repro.core import CPU_PAPER_POWER, TPU_V5E_POWER
+
+    from benchmarks.paper_figs import fig6_10
+    out = {}
+    for tag, power in (("paper_cpu", CPU_PAPER_POWER), ("tpu", TPU_V5E_POWER)):
+        rows = fig6_10(power=power)
+        out[tag] = rows
+        for r in rows:
+            _row(f"fig6_10_{tag}_{r['app']}", r["dvo_time_s"] * 1e6 / 12,
+                 f"energy=-{r['energy_improvement']:.1%};"
+                 f"time=+{r['time_increase']:.1%};met={r['deadline_met']};"
+                 f"est_mape={r['est_mape']:.3f}")
+    return out
+
+
+def bench_fig11_12():
+    from benchmarks.paper_figs import run_app_comparison
+    rows = []
+    for z in (0.0, 1.0, 2.0):
+        for app in ("wordcount", "avg"):
+            r = run_app_comparison(app, z=z)
+            rows.append({"z": z, **r})
+            _row(f"fig11_12_z{z:g}_{app}", r["dvo_time_s"] * 1e6 / 12,
+                 f"norm_energy={1 - r['energy_improvement']:.3f};"
+                 f"norm_time={1 + r['time_increase']:.3f};met={r['deadline_met']}")
+    return rows
+
+
+def bench_fig13():
+    from benchmarks.paper_figs import SLACK, run_app_comparison
+    rows = []
+    for name, slack in SLACK.items():
+        for app in ("wordcount", "grep", "inverted_index", "avg", "sum"):
+            r = run_app_comparison(app, slack=slack)
+            rows.append({"deadline": name, **r})
+            _row(f"fig13_{name}_{app}", r["dvo_time_s"] * 1e6 / 12,
+                 f"energy=-{r['energy_improvement']:.1%};"
+                 f"time=+{r['time_increase']:.1%};met={r['deadline_met']}")
+    return rows
+
+
+def bench_planners():
+    """Beyond-paper planners vs the paper planner on one workload."""
+    from benchmarks.paper_figs import run_app_comparison
+    rows = []
+    for planner in ("paper", "global"):
+        r = run_app_comparison("wordcount", planner=planner)
+        rows.append(r)
+        _row(f"planner_{planner}_wordcount", r["dvo_time_s"] * 1e6 / 12,
+             f"energy=-{r['energy_improvement']:.1%};met={r['deadline_met']}")
+    return rows
+
+
+def bench_roofline():
+    out = {}
+    for tag, path in (("base", "results/roofline_sp.json"),
+                      ("opt", "results/roofline_sp_opt.json")):
+        if not os.path.exists(path):
+            print(f"# roofline[{tag}]: {path} missing — run launch/dryrun.py "
+                  f"--all [--opt] and benchmarks/report.py first")
+            continue
+        with open(path) as f:
+            rows = json.load(f)
+        out[tag] = rows
+        for r in rows:
+            if r["status"] != "ok":
+                continue
+            _row(f"roofline_{tag}_{r['arch']}_{r['shape']}",
+                 r["bound_s"] * 1e6,
+                 f"dom={r['dominant']};roofline={r['roofline_fraction']:.3f};"
+                 f"useful={r['useful_ratio']:.2f}")
+    return out
+
+
+def bench_train():
+    import tempfile
+
+    from repro.configs import smoke_config
+    from repro.data import BlockDataset
+    from repro.train import TrainConfig, Trainer
+    cfg = smoke_config("olmo-1b")
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainConfig(batch=2, seq_len=64, total_steps=16, ckpt_every=8,
+                         warmup=2, ckpt_dir=d, dvfs_enabled=True,
+                         deadline_slack=1.25, seed=0)
+        ds = BlockDataset(n_blocks=4, records_per_block=64, max_len=48,
+                          vocab=cfg.vocab, seed=1)
+        t0 = time.perf_counter()
+        res = Trainer(cfg, tc, dataset=ds).run(resume=False)
+        us = (time.perf_counter() - t0) * 1e6 / tc.total_steps
+    sav = 1 - res["energy"]["busy_j"] / max(res["energy_dvo"]["busy_j"], 1e-9)
+    _row("train_dvdvfs_smoke", us,
+         f"loss:{res['first_loss']:.2f}->{res['final_loss']:.2f};"
+         f"energy=-{sav:.1%};stragglers={len(res['straggler_events'])}")
+    return {"first_loss": res["first_loss"], "final_loss": res["final_loss"],
+            "energy": res["energy"], "energy_dvo": res["energy_dvo"]}
+
+
+def bench_serve():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import smoke_config
+    from repro.core import RooflineTimeModel
+    from repro.models import transformer as T
+    from repro.serve import ServeConfig, ServingEngine
+    cfg = smoke_config("olmo-1b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    # decode on TPU is memory-bound: hand the engine that roofline so the
+    # planner can take the free down-clock
+    rt = RooflineTimeModel.from_counts(flops=1e9, hbm_bytes=8e9, coll_bytes=0)
+    eng = ServingEngine(cfg, params,
+                        ServeConfig(batch=2, max_len=256, window=8,
+                                    planner="roofline", slack=1.1), roofline=rt)
+    prompts = {"tokens": jnp.asarray(
+        np.random.default_rng(0).integers(1, cfg.vocab, (2, 32)), jnp.int32)}
+    t0 = time.perf_counter()
+    out = eng.generate(prompts, n_tokens=64)
+    us = (time.perf_counter() - t0) * 1e6 / out["n_generated"]
+    sav = 1 - out["energy"]["busy_j"] / max(out["energy_dvo"]["busy_j"], 1e-9)
+    _row("serve_dvdvfs_smoke", us,
+         f"tokens={out['n_generated']};energy=-{sav:.1%}")
+    return {"energy": out["energy"], "energy_dvo": out["energy_dvo"]}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slow paper-figure measurements")
+    ap.add_argument("--save", default="results/bench.json")
+    args = ap.parse_args()
+
+    results = {}
+    print("name,us_per_call,derived")
+    if not args.quick:
+        results["table1"] = bench_table1()
+        results["fig6_10"] = bench_fig6_10()
+        results["fig11_12"] = bench_fig11_12()
+        results["fig13"] = bench_fig13()
+        results["planners"] = bench_planners()
+    results["roofline"] = bench_roofline()
+    results["train"] = bench_train()
+    results["serve"] = bench_serve()
+
+    os.makedirs(os.path.dirname(args.save), exist_ok=True)
+    with open(args.save, "w") as f:
+        json.dump(results, f, indent=2, default=str)
+    print(f"# saved -> {args.save}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""The paper's five evaluation workloads, implemented in JAX.
+
+Each app exposes:
+  * ``run(block) -> pytree``           — jit-able computation over one data block,
+  * ``flops(block_stats) -> float``    — analytic cost (drives the estimator),
+  * ``cost_features(stats) -> dict``   — features for the linear CostModel.
+
+Blocks are fixed-shape (records × max_len int32 tokens, 0 = PAD) so every block
+compiles once — the *variety* is in the content (non-pad counts, match density),
+exactly the paper's setting (equal-size blocks, uneven work).
+"""
+from repro.apps.wordcount import WordCount
+from repro.apps.grep import Grep
+from repro.apps.inverted_index import InvertedIndex
+from repro.apps.aggregate import Average, Sum
+from repro.apps.base import App, measure_block_seconds
+
+ALL_APPS = {
+    "wordcount": WordCount,
+    "grep": Grep,
+    "inverted_index": InvertedIndex,
+    "avg": Average,
+    "sum": Sum,
+}
+
+__all__ = ["App", "WordCount", "Grep", "InvertedIndex", "Average", "Sum",
+           "ALL_APPS", "measure_block_seconds"]

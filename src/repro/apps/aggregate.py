@@ -1,0 +1,52 @@
+"""AVG (TPC-H analogue) and SUM (Amazon-reviews analogue) aggregations.
+
+Blocks carry numeric columns next to the tokens:
+  * ``values``  (N,) float32 — e.g. l_extendedprice / review rating,
+  * ``group``   (N,) int32   — e.g. shipmode bucket / product bucket,
+  * ``select``  (N,) bool    — predicate (the Zipf-varied quantity).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["Average", "Sum"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Average:
+    n_groups: int = 8
+    name: str = "avg"
+
+    def run(self, block):
+        v, g = block["values"], block["group"]
+        m = block["select"].astype(v.dtype)
+        sums = jnp.zeros((self.n_groups,), v.dtype).at[g].add(v * m)
+        cnts = jnp.zeros((self.n_groups,), v.dtype).at[g].add(m)
+        return sums / jnp.maximum(cnts, 1.0)
+
+    def flops(self, stats: dict) -> float:
+        return 6.0 * stats["records"] + 32.0 * stats.get("selected", 0.0)
+
+    def cost_features(self, stats: dict) -> dict:
+        return {"records": float(stats["records"]),
+                "selected": float(stats.get("selected", 0.0)), "const": 1.0}
+
+
+@dataclasses.dataclass(frozen=True)
+class Sum:
+    n_groups: int = 8
+    name: str = "sum"
+
+    def run(self, block):
+        v, g = block["values"], block["group"]
+        m = block["select"].astype(v.dtype)
+        return jnp.zeros((self.n_groups,), v.dtype).at[g].add(v * m)
+
+    def flops(self, stats: dict) -> float:
+        return 4.0 * stats["records"] + 16.0 * stats.get("selected", 0.0)
+
+    def cost_features(self, stats: dict) -> dict:
+        return {"records": float(stats["records"]),
+                "selected": float(stats.get("selected", 0.0)), "const": 1.0}

@@ -1,0 +1,31 @@
+"""App protocol + wall-time measurement used by the sampling estimator."""
+from __future__ import annotations
+
+import time
+from typing import Protocol
+
+import jax
+import numpy as np
+
+__all__ = ["App", "measure_block_seconds"]
+
+
+class App(Protocol):
+    name: str
+
+    def run(self, block): ...           # jit-able; block: dict of arrays
+    def flops(self, stats: dict) -> float: ...
+    def cost_features(self, stats: dict) -> dict: ...
+
+
+def measure_block_seconds(app: App, block, *, repeats: int = 3) -> float:
+    """Median wall time of one jitted run over ``block`` (compile excluded)."""
+    fn = jax.jit(app.run)
+    out = fn(block)
+    jax.block_until_ready(out)  # warm-up / compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(block))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))

@@ -1,0 +1,44 @@
+"""InvertedIndex — token -> sorted postings (record, position) for the block.
+
+Emitted as fixed-shape COO arrays (sorted-by-token order + per-token offsets into the
+postings), the standard dense-framework layout for an index shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["InvertedIndex"]
+
+
+@dataclasses.dataclass(frozen=True)
+class InvertedIndex:
+    vocab: int = 32768
+    name: str = "inverted_index"
+
+    def run(self, block):
+        tokens = block["tokens"]                               # (N, L)
+        n, length = tokens.shape
+        flat = tokens.reshape(-1)
+        valid = flat != 0
+        # stable sort by token id; PADs (0) sort first and are masked out via offsets
+        order = jnp.argsort(flat, stable=True)
+        sorted_tok = flat[order]
+        rec = (order // length).astype(jnp.int32)
+        pos = (order % length).astype(jnp.int32)
+        # postings offsets per token id: searchsorted over the sorted token array
+        offsets = jnp.searchsorted(sorted_tok, jnp.arange(self.vocab + 1))
+        return {"tokens_sorted": sorted_tok, "record": rec, "position": pos,
+                "offsets": offsets, "n_valid": valid.sum()}
+
+    def flops(self, stats: dict) -> float:
+        t = stats["tokens_padded"]  # sort runs over the padded block
+        import math
+        return 8.0 * t * max(math.log2(max(t, 2)), 1.0)
+
+    def cost_features(self, stats: dict) -> dict:
+        import math
+        t = float(stats["tokens_padded"])
+        return {"tokens_padded_logn": t * max(math.log2(max(t, 2)), 1.0),
+                "tokens": float(stats["tokens"]), "const": 1.0}

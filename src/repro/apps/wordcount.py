@@ -1,0 +1,29 @@
+"""WordCount — count occurrences of every word (token id) in the block."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["WordCount"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WordCount:
+    vocab: int = 32768
+    name: str = "wordcount"
+
+    def run(self, block):
+        tokens = block["tokens"]                       # (N, L) int32, 0 = PAD
+        mask = (tokens != 0).astype(jnp.int32)
+        flat = tokens.reshape(-1)
+        counts = jnp.zeros((self.vocab,), jnp.int32).at[flat].add(mask.reshape(-1))
+        return counts.at[0].set(0)                     # drop PAD bucket
+
+    def flops(self, stats: dict) -> float:
+        # one scatter-add + mask per token
+        return 4.0 * stats["tokens"]
+
+    def cost_features(self, stats: dict) -> dict:
+        return {"tokens": float(stats["tokens"]), "records": float(stats["records"]),
+                "const": 1.0}

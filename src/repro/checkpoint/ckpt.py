@@ -1,0 +1,169 @@
+"""Fault-tolerant checkpointing: atomic, async, topology-independent.
+
+Format: one ``.npz`` of flattened '/'-joined leaf paths + a JSON metadata sidecar
+(step, config hash, tree structure).  Arrays are saved as FULL (unsharded) host
+arrays, so a checkpoint written on a 512-chip mesh restores onto ANY mesh — the
+caller re-shards via device_put with the new topology's specs (elastic restart).
+
+Write protocol: temp dir -> fsync -> atomic rename; a crash mid-write can never
+corrupt the latest valid checkpoint.  ``CheckpointManager`` keeps the newest K and
+restores the newest VALID one (torn writes are skipped).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]
+
+_SEP = "§"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree: Any, *, step: int, extra: dict | None = None):
+    """Atomically write ``tree`` to ``path`` (a directory)."""
+    parent = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(parent, exist_ok=True)
+    flat = _flatten(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    tmp = tempfile.mkdtemp(prefix=".ckpt_tmp_", dir=parent)
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        meta = {
+            "step": int(step),
+            "keys": sorted(flat.keys()),
+            "treedef": str(treedef),
+            "extra": extra or {},
+            "complete": True,
+        }
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def load_checkpoint(path: str, like: Any, *, shardings: Any = None) -> tuple:
+    """Restore into the structure of ``like``; optionally device_put to shardings.
+
+    Returns (tree, step).  Raises FileNotFoundError / ValueError on missing or
+    torn checkpoints.
+    """
+    meta_p = os.path.join(path, "meta.json")
+    if not os.path.exists(meta_p):
+        raise FileNotFoundError(path)
+    with open(meta_p) as f:
+        meta = json.load(f)
+    if not meta.get("complete"):
+        raise ValueError(f"torn checkpoint: {path}")
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out_leaves = []
+    for path_keys, leaf in leaves_like:
+        key = _SEP.join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path_keys)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        out_leaves.append(arr.astype(leaf.dtype))
+    tree = jax.tree_util.tree_structure(like).unflatten(out_leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree, int(meta["step"])
+
+
+class CheckpointManager:
+    """keep-K manager with async save and newest-valid restore."""
+
+    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    def _ckpt_path(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def steps(self) -> list:
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_"):
+                try:
+                    out.append(int(d.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, tree: Any, step: int, extra: dict | None = None):
+        self.wait()  # one in-flight save at a time
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot off-device NOW
+
+        def work():
+            try:
+                save_checkpoint(self._ckpt_path(step), host_tree, step=step,
+                                extra=extra)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise err
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._ckpt_path(s), ignore_errors=True)
+
+    def restore_latest(self, like: Any, *, shardings: Any = None):
+        """Newest VALID checkpoint, or None if none exist."""
+        self.wait()
+        for step in reversed(self.steps()):
+            try:
+                return load_checkpoint(self._ckpt_path(step), like,
+                                       shardings=shardings)
+            except (ValueError, KeyError, FileNotFoundError, OSError):
+                continue  # torn/corrupt: try older
+        return None

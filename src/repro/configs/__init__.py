@@ -1,0 +1,6 @@
+from repro.configs.base import ARCH_IDS, ArchConfig, LayerSpec, get_arch
+from repro.configs.shapes import SHAPES, ShapeCell, applicable_cells, cell_applicable
+from repro.configs.smoke import smoke_config
+
+__all__ = ["ARCH_IDS", "ArchConfig", "LayerSpec", "get_arch", "SHAPES",
+           "ShapeCell", "applicable_cells", "cell_applicable", "smoke_config"]

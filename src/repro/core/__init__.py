@@ -1,0 +1,26 @@
+"""DV-DVFS core: the paper's contribution as a composable library.
+
+Pipeline (paper Fig. 3/4):  blocks -> sampling -> estimator -> frequency planner ->
+execution (+ energy accounting) — with a Data-Variety-Oblivious (DVO) baseline and
+beyond-paper global/roofline planners (DESIGN.md §7).
+"""
+from repro.core.energy import (CPU_PAPER_POWER, DEFAULT_LADDER, TPU_V5E_POWER,
+                               FrequencyLadder, PowerModel)
+from repro.core.estimator import (V5E, ChipSpec, CostModel, RooflineTerms,
+                                  RooflineTimeModel)
+from repro.core.sampling import BlockEstimate, required_sample_size, sample_block_cost
+from repro.core.scheduler import (BlockInfo, BlockPlan, ExecutionReport,
+                                  SchedulePlan, block_time, plan_dvfs, plan_dvo,
+                                  simulate)
+from repro.core.variety import (VarietyStats, variety_stats, zipf_block_sizes,
+                                zipf_weights)
+
+__all__ = [
+    "CPU_PAPER_POWER", "DEFAULT_LADDER", "TPU_V5E_POWER", "FrequencyLadder",
+    "PowerModel",
+    "V5E", "ChipSpec", "CostModel", "RooflineTerms", "RooflineTimeModel",
+    "BlockEstimate", "required_sample_size", "sample_block_cost",
+    "BlockInfo", "BlockPlan", "ExecutionReport", "SchedulePlan",
+    "block_time", "plan_dvfs", "plan_dvo", "simulate",
+    "VarietyStats", "variety_stats", "zipf_block_sizes", "zipf_weights",
+]

@@ -1,0 +1,95 @@
+"""Sampling — discover per-block variety cheaply (Algorithm 1, line 7).
+
+The paper samples each block to estimate its processing requirements, reporting <1 %
+overhead for a 5 % error margin at 95 % confidence (their Gapprox lineage).  We
+implement the same contract:
+
+  * sample a fraction of each block's records,
+  * estimate the block's total cost = mean(sampled per-record cost) * n_records,
+  * attach a bootstrap confidence interval so the planner can reserve an error margin
+    proportional to the actual estimation uncertainty instead of a fixed fudge.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+__all__ = ["BlockEstimate", "sample_block_cost", "required_sample_size"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockEstimate:
+    """Estimated total cost of one block (seconds, or any additive cost unit)."""
+
+    total: float
+    ci_low: float
+    ci_high: float
+    n_sampled: int
+    n_records: int
+
+    @property
+    def rel_halfwidth(self) -> float:
+        if self.total <= 0:
+            return 0.0
+        return max(self.total - self.ci_low, self.ci_high - self.total) / self.total
+
+
+def sample_block_cost(
+    record_costs: Sequence[float] | np.ndarray,
+    *,
+    fraction: float = 0.05,
+    min_samples: int = 16,
+    n_boot: int = 200,
+    confidence: float = 0.95,
+    seed: int = 0,
+    cost_fn: Callable[[np.ndarray], np.ndarray] | None = None,
+) -> BlockEstimate:
+    """Estimate the total cost of a block from a sample of its records.
+
+    ``record_costs`` is the per-record cost array (only the sampled entries are
+    "looked at" — the caller may pass a lazy array).  ``cost_fn`` optionally maps the
+    sampled records to costs (e.g. runs the app on the sample and measures).
+    """
+    costs = np.asarray(record_costs, dtype=np.float64)
+    n = len(costs)
+    if n == 0:
+        return BlockEstimate(0.0, 0.0, 0.0, 0, 0)
+    rng = np.random.default_rng(seed)
+    k = min(n, max(min_samples, int(np.ceil(fraction * n))))
+    idx = rng.choice(n, size=k, replace=False)
+    sampled = costs[idx]
+    if cost_fn is not None:
+        sampled = np.asarray(cost_fn(sampled), dtype=np.float64)
+
+    est_total = float(sampled.mean() * n)
+    # bootstrap CI on the mean
+    boots = np.empty(n_boot)
+    for b in range(n_boot):
+        boots[b] = sampled[rng.integers(0, k, size=k)].mean()
+    lo_q, hi_q = (1 - confidence) / 2, 1 - (1 - confidence) / 2
+    ci_low = float(np.quantile(boots, lo_q) * n)
+    ci_high = float(np.quantile(boots, hi_q) * n)
+    return BlockEstimate(total=est_total, ci_low=ci_low, ci_high=ci_high,
+                         n_sampled=k, n_records=n)
+
+
+def required_sample_size(cov: float, rel_err: float = 0.05,
+                         confidence: float = 0.95) -> int:
+    """Classic n ≈ (z·CoV/e)² sample size for a mean with relative error ``rel_err``."""
+    from math import erf, sqrt
+
+    # two-sided z for the given confidence (0.95 → 1.96) via bisection on Φ
+    lo, hi = 0.0, 10.0
+    target = confidence
+    for _ in range(80):
+        mid = 0.5 * (lo + hi)
+        p = erf(mid / sqrt(2.0))
+        if p < target:
+            lo = mid
+        else:
+            hi = mid
+    z = 0.5 * (lo + hi)
+    n = (z * cov / rel_err) ** 2
+    return max(1, int(np.ceil(n)))

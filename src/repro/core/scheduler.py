@@ -1,0 +1,303 @@
+"""DV-DVFS scheduler — Algorithm 1 (paper-faithful) + beyond-paper planners.
+
+Paper Algorithm 1:
+    divide Deadline into N_DP equal time slots
+    divide InputData into N_DP equal-size blocks
+    sample every block  -> estimate PT_i at f_max
+    estimate SFB_i      -> lowest frequency finishing B_i inside TS_i (minus margin)
+
+Planners:
+  * ``paper``   — exact Algorithm 1: equal slots, per-slot lowest feasible frequency,
+                  fixed error margin (paper Fig. 5's reserved area).
+  * ``global``  — beyond-paper: Algorithm 1 samples ALL blocks before deciding, so the
+                  plan is offline — a global greedy can trade slack across blocks:
+                  start at f_max everywhere, repeatedly take the single down-clock step
+                  with the best energy-saved / time-added ratio while the total still
+                  fits the deadline (minus margin).  Strictly dominates equal slots at
+                  tight deadlines.
+  * ``roofline``— beyond-paper TPU adaptation: ``global`` driven by per-block roofline
+                  time models ``PT(f) = max(T_comp·f_max/f, T_mem, T_coll)``.  Memory/
+                  collective-bound blocks down-clock to their zero-cost point for FREE
+                  (Δtime = 0), so the greedy takes those first.
+  * DVO baseline — Data-Variety-Oblivious: f_max everywhere (paper's comparison).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Sequence
+
+from repro.core.energy import DEFAULT_LADDER, FrequencyLadder, PowerModel, TPU_V5E_POWER
+from repro.core.estimator import RooflineTimeModel
+
+__all__ = [
+    "BlockInfo", "BlockPlan", "SchedulePlan", "ExecutionReport",
+    "plan_dvfs", "plan_dvo", "simulate",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockInfo:
+    """What the planner knows about one block."""
+
+    index: int
+    est_time_fmax: float                    # estimated PT_i at f_max (from sampling)
+    est_rel_halfwidth: float = 0.0          # estimation uncertainty (CI halfwidth / PT)
+    util: float = 1.0                       # busy utilization while processing
+    roofline: RooflineTimeModel | None = None  # optional TPU time model
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    index: int
+    slot_s: float
+    rel_freq: float
+    pred_time_s: float
+    pred_energy_j: float
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulePlan:
+    planner: str
+    deadline_s: float
+    blocks: tuple
+    feasible: bool
+
+    @property
+    def pred_total_time(self) -> float:
+        return sum(b.pred_time_s for b in self.blocks)
+
+    @property
+    def pred_total_energy(self) -> float:
+        return sum(b.pred_energy_j for b in self.blocks)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionReport:
+    planner: str
+    total_time_s: float
+    total_energy_j: float          # paper EC (formula 7): busy-only
+    idle_energy_j: float           # idle tail up to the deadline window
+    deadline_s: float
+    deadline_met: bool
+    per_block_time: tuple
+    per_block_energy: tuple
+
+    def improvement_vs(self, other: "ExecutionReport") -> float:
+        """Fractional energy improvement of self over ``other`` (paper's metric)."""
+        if other.total_energy_j <= 0:
+            return 0.0
+        return 1.0 - self.total_energy_j / other.total_energy_j
+
+
+def block_time(block: BlockInfo, rel_freq: float) -> float:
+    """PT_i at frequency f.
+
+    Roofline-aware when the block carries a time model (the model's compute term is
+    rescaled so that PT(f_max) matches the sampled estimate); otherwise the paper's
+    pure compute scaling PT(f) = PT(f_max)·f_max/f.
+    """
+    if block.roofline is not None:
+        scale = block.est_time_fmax / max(block.roofline.time_at(1.0), 1e-12)
+        return block.roofline.time_at(rel_freq) * scale
+    return block.est_time_fmax / max(rel_freq, 1e-6)
+
+
+def _required_freq(block: BlockInfo, budget_s: float,
+                   ladder: FrequencyLadder) -> float:
+    """Lowest ladder state finishing the block within ``budget_s`` (f_max if none)."""
+    if budget_s <= 0:
+        return ladder.f_max
+    for f in ladder.states:
+        if block_time(block, f) <= budget_s + 1e-12:
+            return f
+    return ladder.f_max
+
+
+def _block_energy(power: PowerModel, block: BlockInfo, t: float,
+                  f: float) -> float:
+    """Paper EC term (formula 7): busy-only processing energy."""
+    return power.busy_energy(t, f, util=block.util)
+
+
+def plan_dvfs(
+    blocks: Sequence[BlockInfo],
+    deadline_s: float,
+    *,
+    planner: str = "paper",
+    ladder: FrequencyLadder = DEFAULT_LADDER,
+    power: PowerModel = TPU_V5E_POWER,
+    error_margin: float = 0.05,
+    adaptive_margin: bool = False,
+) -> SchedulePlan:
+    """Build a frequency plan for ``blocks`` under ``deadline_s``.
+
+    ``error_margin`` reserves a fraction of the budget (paper Fig. 5's "reserved
+    area").  With ``adaptive_margin`` the reserve becomes max(error_margin, block CI
+    half-width): sampling uncertainty drives the reserve.
+    """
+    n = len(blocks)
+    if n == 0:
+        return SchedulePlan(planner, deadline_s, (), True)
+    if planner not in ("paper", "global", "slack_pool", "roofline"):
+        raise ValueError(f"unknown planner: {planner}")
+    if planner == "slack_pool":  # historical alias
+        planner = "global"
+
+    slot = deadline_s / n  # Algorithm 1 line 3: equal time slots
+
+    def margin_for(b: BlockInfo) -> float:
+        return max(error_margin, b.est_rel_halfwidth) if adaptive_margin \
+            else error_margin
+
+    if planner == "paper":
+        # Per-slot frequency choice; a block that overflows its slot even at f_max
+        # simply runs at f_max (cheap blocks' slack absorbs the overflow).
+        freqs = []
+        for b in blocks:
+            budget = slot * (1.0 - margin_for(b))
+            freqs.append(_required_freq(b, budget, ladder))
+        # Algorithm 1 line 5 (while TPT < D): repair pass — if the per-slot plan
+        # still overruns the total deadline, undo the down-clocks that cost the most
+        # time per joule saved until TPT fits.
+        state_idx = {round(f, 6): i for i, f in enumerate(ladder.states)}
+        pos = [state_idx[round(f, 6)] for f in freqs]
+        times = [block_time(b, ladder.states[p]) for b, p in zip(blocks, pos)]
+        total_t = sum(times)
+        target = deadline_s * (1.0 - error_margin)
+        while total_t > target + 1e-9:
+            best, best_rate = None, -1.0
+            for i, b in enumerate(blocks):
+                if pos[i] >= len(ladder.states) - 1:
+                    continue
+                f_hi = ladder.states[pos[i] + 1]
+                dt = times[i] - block_time(b, f_hi)  # time recovered (>=0)
+                de = (_block_energy(power, b, block_time(b, f_hi), f_hi)
+                      - _block_energy(power, b, times[i], ladder.states[pos[i]]))
+                rate = dt / max(de, 1e-12)  # time recovered per extra joule
+                if rate > best_rate:
+                    best, best_rate = i, rate
+            if best is None:
+                break  # everything already at f_max
+            pos[best] += 1
+            new_t = block_time(blocks[best], ladder.states[pos[best]])
+            total_t += new_t - times[best]
+            times[best] = new_t
+        plans = []
+        for i, b in enumerate(blocks):
+            f = ladder.states[pos[i]]
+            plans.append(BlockPlan(b.index, slot, f, times[i],
+                                   _block_energy(power, b, times[i], f)))
+        feasible = total_t <= deadline_s + 1e-9
+        return SchedulePlan("paper", deadline_s, tuple(plans), feasible)
+
+    # --- global greedy ("global" / "roofline") ------------------------------
+    # state: per-block ladder position (start at f_max); lower the block whose next
+    # down-step has the best ΔE/Δt while total time fits deadline*(1-margin).
+    states = list(ladder.states)
+    pos = [len(states) - 1 for _ in blocks]  # index into ladder per block
+    times = [block_time(b, 1.0) for b in blocks]
+    budget_total = deadline_s * (1.0 - error_margin)
+
+    def energy_at(i: int, p: int) -> float:
+        f = states[p]
+        t = block_time(blocks[i], f)
+        return _block_energy(power, blocks[i], t, f)
+
+    energies = [energy_at(i, pos[i]) for i in range(n)]
+    total_t = sum(times)
+    feasible = total_t <= budget_total + 1e-9
+
+    # max-heap on savings rate; (-rate, i, target_pos) entries, lazily validated
+    def step_gain(i: int) -> tuple | None:
+        p = pos[i]
+        if p == 0:
+            return None
+        f_lo = states[p - 1]
+        t_lo = block_time(blocks[i], f_lo)
+        dt = t_lo - block_time(blocks[i], states[p])
+        e_lo = _block_energy(power, blocks[i], t_lo, f_lo)
+        de = energies[i] - e_lo
+        if de <= 1e-15:
+            return None
+        rate = de / max(dt, 1e-12)
+        return (-rate, i, p - 1, t_lo, e_lo, dt)
+
+    heap = []
+    for i in range(n):
+        g = step_gain(i)
+        if g is not None:
+            heapq.heappush(heap, g)
+
+    while heap:
+        neg_rate, i, target, t_lo, e_lo, dt = heapq.heappop(heap)
+        if target != pos[i] - 1:
+            continue  # stale entry
+        if total_t + dt > budget_total + 1e-9:
+            continue  # this step no longer fits; others (Δt=0 roofline) may
+        pos[i] = target
+        total_t += dt
+        times[i] = t_lo
+        energies[i] = e_lo
+        g = step_gain(i)
+        if g is not None:
+            heapq.heappush(heap, g)
+
+    plans = []
+    for i, b in enumerate(blocks):
+        f = states[pos[i]]
+        plans.append(BlockPlan(b.index, slot, f, times[i], energies[i]))
+    feasible = sum(times) <= deadline_s + 1e-9
+    return SchedulePlan(planner, deadline_s, tuple(plans), feasible)
+
+
+def plan_dvo(
+    blocks: Sequence[BlockInfo],
+    deadline_s: float,
+    *,
+    power: PowerModel = TPU_V5E_POWER,
+) -> SchedulePlan:
+    """Data-Variety-Oblivious baseline: everything at f_max, same slot layout."""
+    n = max(len(blocks), 1)
+    slot = deadline_s / n
+    plans = []
+    for b in blocks:
+        t = block_time(b, 1.0)
+        plans.append(BlockPlan(b.index, slot, 1.0, t,
+                               _block_energy(power, b, t, 1.0)))
+    feasible = sum(p.pred_time_s for p in plans) <= deadline_s + 1e-9
+    return SchedulePlan("dvo", deadline_s, tuple(plans), feasible)
+
+
+def simulate(
+    plan: SchedulePlan,
+    true_blocks: Sequence[BlockInfo],
+    *,
+    power: PowerModel = TPU_V5E_POWER,
+) -> ExecutionReport:
+    """Execute a plan against TRUE block costs (which sampling only estimated).
+
+    ``true_blocks`` mirror the planner's blocks but with ``est_time_fmax`` set to the
+    true processing time at f_max.  Blocks run back-to-back (work-conserving): the
+    deadline check is on the true total finish time, like the paper's evaluation.
+    """
+    by_index = {b.index: b for b in true_blocks}
+    times, energies = [], []
+    for bp in plan.blocks:
+        tb = by_index[bp.index]
+        t = block_time(tb, bp.rel_freq)
+        e = power.busy_energy(t, bp.rel_freq, util=tb.util)
+        times.append(t)
+        energies.append(e)
+    total_busy = float(sum(times))
+    idle = max(plan.deadline_s - total_busy, 0.0) * power.p_idle
+    return ExecutionReport(
+        planner=plan.planner,
+        total_time_s=total_busy,
+        total_energy_j=float(sum(energies)),
+        idle_energy_j=float(idle),
+        deadline_s=plan.deadline_s,
+        deadline_met=total_busy <= plan.deadline_s + 1e-9,
+        per_block_time=tuple(times),
+        per_block_energy=tuple(energies),
+    )

@@ -1,0 +1,6 @@
+from repro.data.synth import SOURCES, SourceSpec, make_corpus_block
+from repro.data.blocks import BlockDataset, BlockStats
+from repro.data.packing import pack_tokens, PackedBatch
+
+__all__ = ["SOURCES", "SourceSpec", "make_corpus_block", "BlockDataset",
+           "BlockStats", "pack_tokens", "PackedBatch"]

@@ -1,0 +1,108 @@
+"""Block dataset — equal-size blocks with Zipf-distributed work (paper §4).
+
+Blocks have identical SHAPE (records × max_len) — what varies is content:
+  * non-pad token counts (source mixture drifts block-to-block),
+  * predicate-match density, ranked Zipf(z) across blocks (paper's variety model).
+
+The paper: "partitions are ranked as per the number of records in the partition that
+satisfy the given predicate", frequency ∝ 1/k^z.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.variety import zipf_weights
+from repro.data.synth import SOURCES, make_corpus_block
+
+__all__ = ["BlockStats", "BlockDataset"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockStats:
+    """Cheap per-block statistics (what sampling is allowed to see in full)."""
+
+    records: int
+    tokens: int           # non-pad tokens
+    tokens_padded: int
+    matches: int          # grep pattern occurrences
+    selected: int         # predicate-selected records (AVG/SUM)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class BlockDataset:
+    """Deterministic, lazily-generated blocks."""
+
+    n_blocks: int = 32
+    records_per_block: int = 2048
+    max_len: int = 256
+    vocab: int = 32768
+    variety_z: float = 1.0      # Zipf exponent across blocks (0 = uniform)
+    grep_pattern: tuple = (17, 23, 5)
+    seed: int = 0
+    base_match_density: float = 0.02
+    max_match_density: float = 0.60
+
+    def _mix(self, rng: np.random.Generator) -> np.ndarray:
+        """Per-block source mixture (drifts block to block — aggregation order)."""
+        return rng.dirichlet(np.ones(len(SOURCES)) * 1.5)
+
+    def match_densities(self) -> np.ndarray:
+        """Zipf-ranked predicate densities, shuffled to aggregation order."""
+        w = zipf_weights(self.n_blocks, self.variety_z)
+        d = self.base_match_density + (self.max_match_density
+                                       - self.base_match_density) * w / w.max()
+        rng = np.random.default_rng(self.seed + 7)
+        return d[rng.permutation(self.n_blocks)]
+
+    def block(self, i: int, *, with_tokens: bool = True) -> dict:
+        """Materialize block i: tokens + numeric columns + predicate.
+
+        ``with_tokens=False`` skips corpus generation (for the numeric-only
+        AVG/SUM apps, whose variety lives in the predicate column).
+        """
+        if not 0 <= i < self.n_blocks:
+            raise IndexError(i)
+        rng = np.random.default_rng((self.seed, i))
+        density = float(self.match_densities()[i])
+        out = {}
+        if with_tokens:
+            tokens = make_corpus_block(self.records_per_block, self.max_len,
+                                       self.vocab, self._mix(rng), rng=rng)
+            # plant grep pattern into `density` fraction of records
+            from repro.apps.grep import Grep
+            tokens = Grep.plant(tokens, self.grep_pattern, density,
+                                seed=int(rng.integers(2**31)))
+            out["tokens"] = tokens
+        n = self.records_per_block
+        out["values"] = rng.gamma(2.0, 50.0, size=n).astype(np.float32)
+        out["group"] = rng.integers(0, 8, size=n).astype(np.int32)
+        out["select"] = rng.random(n) < density
+        return out
+
+    def stats(self, i: int) -> BlockStats:
+        b = self.block(i)
+        tokens = b["tokens"]
+        pat = np.asarray(self.grep_pattern)
+        p = len(pat)
+        hits = np.ones(tokens.shape[0], np.int64) * 0
+        win = np.ones((tokens.shape[0], tokens.shape[1] - p + 1), bool)
+        for j in range(p):
+            win &= tokens[:, j:tokens.shape[1] - p + 1 + j] == pat[j]
+        hits = int(win.sum())
+        return BlockStats(
+            records=tokens.shape[0],
+            tokens=int((tokens != 0).sum()),
+            tokens_padded=int(tokens.size),
+            matches=hits,
+            selected=int(b["select"].sum()),
+        )
+
+    def __iter__(self) -> Iterator[dict]:
+        for i in range(self.n_blocks):
+            yield self.block(i)

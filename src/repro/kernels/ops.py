@@ -1,0 +1,50 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the container is CPU-only: the kernel
+body executes in Python for validation); on a TPU backend pass interpret=False
+to compile the real Mosaic kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_stats import block_stats_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+__all__ = ["flash_attention", "ssd_scan", "block_stats", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "swa_window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, swa_window=None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return flash_attention_pallas(q, k, v, causal=causal,
+                                  swa_window=swa_window, block_q=block_q,
+                                  block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a_log, b_mat, c_mat, *, chunk: int = 128,
+             interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return ssd_scan_pallas(x, dt, a_log, b_mat, c_mat, chunk=chunk,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("pattern", "block_rows",
+                                             "interpret"))
+def block_stats(tokens, pattern: tuple = (17, 23, 5), *, block_rows: int = 128,
+                interpret: bool | None = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return block_stats_pallas(tokens, pattern, block_rows=block_rows,
+                              interpret=interpret)

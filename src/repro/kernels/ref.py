@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "ssd_scan_ref", "block_stats_ref"]
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, swa_window=None):
+    """q: (B, Hq, S, D), k/v: (B, Hkv, S, D) -> (B, Hq, S, D). fp32 softmax."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    ok = jnp.ones((s, s), bool)
+    if causal:
+        ok = ok & (k_pos <= q_pos)
+    if swa_window:
+        ok = ok & (k_pos > q_pos - swa_window)
+    scores = jnp.where(ok, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, a_log, b_mat, c_mat):
+    """Naive O(S) recurrence. x: (BH,S,P), dt: (BH,S), b/c: (BH,S,N)."""
+    bh, s, p = x.shape
+    n = b_mat.shape[-1]
+    a = -jnp.exp(a_log)                                  # (BH,)
+
+    def step(h, inp):
+        xt, dtt, bt, ct, at = inp                        # (BH,P),(BH,),(BH,N)…
+        decay = jnp.exp(dtt * at)                        # (BH,)
+        h = h * decay[:, None, None] + jnp.einsum(
+            "b,bn,bp->bpn", dtt, bt, xt)
+        y = jnp.einsum("bpn,bn->bp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((bh, p, n), jnp.float32)
+    xs = (x.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1).astype(jnp.float32),
+          b_mat.swapaxes(0, 1).astype(jnp.float32),
+          c_mat.swapaxes(0, 1).astype(jnp.float32),
+          jnp.broadcast_to(a, (s, bh)))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype)
+
+
+def block_stats_ref(tokens, pattern=(17, 23, 5)):
+    toks = tokens
+    nonpad = (toks != 0).sum().astype(jnp.float32)
+    mass = toks.astype(jnp.float32).sum()
+    p = len(pattern)
+    length = toks.shape[1]
+    hits = jnp.ones((toks.shape[0], length - p + 1), bool)
+    for j, pj in enumerate(pattern):
+        hits = hits & (toks[:, j:length - p + 1 + j] == pj)
+    matches = hits.sum().astype(jnp.float32)
+    return jnp.stack([nonpad, matches, mass])

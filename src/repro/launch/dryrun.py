@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture × shape × mesh) cell.
+#
+# This proves the distribution config is coherent without hardware: pjit
+# partitions the computation over the production mesh, XLA compiles the
+# per-device module, and we extract memory_analysis / cost_analysis /
+# collective bytes for §Dry-run and §Roofline of EXPERIMENTS.md.
+#
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init).  Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--both-meshes]
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, cell_applicable, get_arch
+from repro.configs.shapes import ShapeCell
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh, mesh_shape_dict
+from repro.models import transformer as T
+from repro.optim import AdamWConfig
+from repro.parallel import batch_specs, cache_specs, param_specs, zero1_specs
+from repro.train.loop import make_train_step
+
+from repro.launch.optconfig import (OPT_MICROBATCHES,
+    OPT_OVERRIDES, TRAIN_MICROBATCHES, build_cfg, microbatches_for)
+from repro.launch.hloparse import parse_collectives
+
+
+def _lower_cell(cfg, cell: ShapeCell, mesh, *, microbatches: int = 1):
+    """Build (fn, args_sds, in_shardings, out_shardings) for one cell."""
+    msd = mesh_shape_dict(mesh)
+    from jax.sharding import NamedSharding
+
+    def ns(spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(
+                                x, jax.sharding.PartitionSpec))
+
+    p_sds = S.params_shapes(cfg)
+    p_spec = param_specs(cfg, p_sds, msd)
+
+    if cell.kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype=cfg.opt_dtype)
+        o_sds = S.opt_shapes(cfg, opt_cfg, p_sds)
+        z_axes = ("data", "model") if cfg.layout in ("dp", "fsdp2d") \
+            else ("data",)
+        o_spec = zero1_specs(param_specs(cfg, p_sds, msd), p_sds, msd,
+                             axes=z_axes)
+        o_spec = {"m": o_spec, "v": o_spec,
+                  "step": jax.sharding.PartitionSpec()}
+        b_sds = S.train_input_specs(cfg, cell)
+        b_spec = batch_specs(cfg, b_sds, msd)
+        step = make_train_step(cfg, opt_cfg, num_microbatches=microbatches)
+        fn = step
+        args = (p_sds, o_sds, b_sds)
+        in_sh = (ns(p_spec), ns(o_spec), ns(b_spec))
+        out_sh = (ns(p_spec), ns(o_spec), None)
+        donate = (0, 1)       # params + opt state update in place
+    elif cell.kind == "prefill":
+        b_sds = S.prefill_input_specs(cfg, cell)
+        b_spec = batch_specs(cfg, b_sds, msd)
+        c_sds = S.cache_shapes(cfg, cell)
+        c_spec = cache_specs(cfg, c_sds, msd)
+
+        def fn(p, b):
+            return T.prefill(p, cfg, b, cell.seq_len, dtype=jnp.bfloat16)
+
+        args = (p_sds, b_sds)
+        in_sh = (ns(p_spec), ns(b_spec))
+        out_sh = (None, ns(c_spec))
+        donate = ()
+    else:  # decode
+        b_sds = S.decode_input_specs(cfg, cell)
+        b_spec = batch_specs(cfg, b_sds, msd)
+        c_sds = S.cache_shapes(cfg, cell)
+        c_spec = cache_specs(cfg, c_sds, msd)
+
+        def fn(p, b, c):
+            return T.decode_step(p, cfg, b["tokens"], c)
+
+        args = (p_sds, b_sds, c_sds)
+        in_sh = (ns(p_spec), ns(b_spec), ns(c_spec))
+        out_sh = (None, ns(c_spec))
+        donate = (2,)         # KV/SSM cache updated in place
+    return fn, args, in_sh, out_sh, donate
+
+
+def dryrun_cfg(arch: str, mesh, *, opt: bool = False,
+               kind: str = "train") -> "ArchConfig":
+    """Arch config specialized to the mesh (see launch/optconfig.py)."""
+    return build_cfg(arch, mesh_shape_dict(mesh), opt=opt, kind=kind)
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             microbatches: int | None = None, verbose: bool = True,
+             opt: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = SHAPES[shape]
+    cfg = dryrun_cfg(arch, mesh, opt=opt, kind=cell.kind)
+    if not cell_applicable(cfg, cell):
+        return {"arch": arch, "shape": shape,
+                "mesh": "multi_pod" if multi_pod else "single_pod",
+                "status": "skipped",
+                "reason": "full-attention arch: long_500k needs sub-quadratic "
+                          "attention (DESIGN.md §4)"}
+    mb = microbatches if microbatches is not None else \
+        microbatches_for(arch, cell.kind, opt)
+    t0 = time.time()
+    fn, args, in_sh, out_sh, donate = _lower_cell(cfg, cell, mesh,
+                                                  microbatches=mb)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+
+    result = {
+        "arch": arch, "shape": shape,
+        "mesh": "multi_pod" if multi_pod else "single_pod",
+        "status": "ok",
+        "kind": cell.kind,
+        "microbatches": mb,
+        "layout": cfg.layout,
+        "opt": opt,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_per_device": float(cost.get("flops", -1.0)) if cost else None,
+        "bytes_accessed_per_device": float(cost.get("bytes accessed", -1.0))
+        if cost else None,
+        "collective_bytes_per_device": coll["looped"],
+        "collective_bytes_raw": coll["raw"],
+        "collective_counts": coll["counts"],
+        "memory": None,
+        "n_devices": int(mesh.devices.size),
+    }
+    if mem is not None:
+        result["memory"] = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", -1)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", -1)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", -1)),
+            "generated_code_bytes":
+                int(getattr(mem, "generated_code_size_in_bytes", -1)),
+        }
+    if verbose:
+        print(json.dumps(result, indent=None)[:400])
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--opt", action="store_true",
+                    help="apply hillclimbed per-arch layouts (OPT_OVERRIDES)")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in meshes:
+                    cells.append((arch, shape, mp))
+    else:
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_skip = n_fail = 0
+    for arch, shape, mp in cells:
+        tag = f"{'mp' if mp else 'sp'}_{arch}_{shape}"
+        out_path = os.path.join(args.out, f"{tag}.json")
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                prev = json.load(f)
+            if prev.get("status") in ("ok", "skipped"):
+                print(f"[cached] {tag}: {prev['status']}")
+                n_ok += prev["status"] == "ok"
+                n_skip += prev["status"] == "skipped"
+                continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        try:
+            res = run_cell(arch, shape, multi_pod=mp,
+                           microbatches=args.microbatches, opt=args.opt)
+            n_ok += res["status"] == "ok"
+            n_skip += res["status"] == "skipped"
+        except Exception as e:  # noqa: BLE001 — record and continue
+            res = {"arch": arch, "shape": shape,
+                   "mesh": "multi_pod" if mp else "single_pod",
+                   "status": "failed", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            n_fail += 1
+            print(f"[FAIL] {tag}: {e}")
+        with open(out_path, "w") as f:
+            json.dump(res, f, indent=2)
+    print(f"\ndryrun summary: ok={n_ok} skipped={n_skip} failed={n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

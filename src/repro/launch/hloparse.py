@@ -1,0 +1,149 @@
+"""Loop-aware HLO accounting.
+
+XLA's ``compiled.cost_analysis()`` and a naive text scan both count a ``while``
+body ONCE, but a lax.scan body executes trip-count times.  This parser walks the
+(post-SPMD, per-device) HLO text, builds the computation -> while-body call tree
+with trip counts (scan trip counts are compile-time constants in the loop
+condition), and returns collective-traffic bytes with the loop multipliers
+applied.
+
+Heuristics documented inline; validated against hand-counted modules in
+tests/test_hloparse.py.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["parse_collectives", "COLLECTIVE_KINDS"]
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                    "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+def _header_name(line: str):
+    """Computation header: '[ENTRY] %name (args...) -> type {' (args may nest)."""
+    s = line.strip()
+    if not (s.endswith("{") and ") -> " in s and "(" in s):
+        return None, False
+    first = s.split("(", 1)[0].strip()
+    is_entry = first.startswith("ENTRY")
+    name = first.replace("ENTRY", "").strip().lstrip("%")
+    return (name or None), is_entry
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:call|fusion)\(.*?to_apply=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _buffer_bytes(type_str: str) -> int:
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        nbytes += n * _DTYPE_BYTES[dt]
+    return nbytes
+
+
+def _split_computations(hlo: str) -> dict:
+    comps: dict = {}
+    name, lines, entry = None, [], None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        hdr, is_entry = _header_name(line)
+        if hdr is not None:
+            name = hdr
+            lines = []
+            comps[name] = lines
+            if is_entry:
+                entry = name
+        elif name is not None:
+            if line.strip() == "}":
+                name = None
+            else:
+                lines.append(line.strip())
+    return {"comps": comps, "entry": entry}
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Returns {kind: bytes} with while-loop trip multipliers applied, plus
+    'total', raw (unmultiplied) totals, and static op counts."""
+    parsed = _split_computations(hlo)
+    comps, entry = parsed["comps"], parsed["entry"]
+
+    # per-computation: collective bytes, while-calls, other computation calls
+    coll = {n: defaultdict(int) for n in comps}
+    counts = {n: defaultdict(int) for n in comps}
+    whiles = {n: [] for n in comps}   # (cond, body)
+    calls = {n: [] for n in comps}
+
+    for n, lines in comps.items():
+        for line in lines:
+            m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", line)
+            if not m:
+                continue
+            rhs = m.group(1)
+            wm = _WHILE_RE.search(rhs)
+            if wm:
+                whiles[n].append((wm.group(1), wm.group(2)))
+            for cm in _CALL_RE.finditer(rhs):
+                calls[n].append(cm.group(1))
+            for kind in COLLECTIVE_KINDS:
+                if re.search(rf"\b{kind}(-start)?\(", rhs):
+                    type_str = rhs.split(kind)[0]
+                    coll[n][kind] += _buffer_bytes(type_str)
+                    counts[n][kind] += 1
+                    break
+
+    def trip_count(cond_name: str) -> int:
+        """Largest integer constant in the condition (scan bound heuristic)."""
+        best = 1
+        for line in comps.get(cond_name, []):
+            for c in _CONST_RE.findall(line):
+                best = max(best, int(c))
+        return best
+
+    # propagate multipliers from entry
+    mult = defaultdict(int)
+    mult[entry] = 1
+    order = [entry]
+    seen = {entry}
+    while order:
+        cur = order.pop(0)
+        for cond, body in whiles.get(cur, []):
+            if body not in comps:
+                continue
+            mult[body] += mult[cur] * trip_count(cond)
+            if body not in seen:
+                seen.add(body)
+                order.append(body)
+        for callee in calls.get(cur, []):
+            if callee in comps:
+                mult[callee] += mult[cur]
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+
+    out = {k: 0 for k in COLLECTIVE_KINDS}
+    raw = {k: 0 for k in COLLECTIVE_KINDS}
+    op_counts = {k: 0 for k in COLLECTIVE_KINDS}
+    for n in comps:
+        m = mult.get(n, 1)  # unreached computations (fusions): count once
+        for kind in COLLECTIVE_KINDS:
+            out[kind] += coll[n][kind] * max(m, 1)
+            raw[kind] += coll[n][kind]
+            op_counts[kind] += counts[n][kind]
+    return {
+        "looped": {**out, "total": sum(out.values())},
+        "raw": {**raw, "total": sum(raw.values())},
+        "counts": op_counts,
+    }

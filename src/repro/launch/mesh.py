@@ -1,0 +1,17 @@
+"""Production meshes.  Functions (not module constants) so importing this module
+never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_shape_dict"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_shape_dict(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

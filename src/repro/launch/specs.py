@@ -1,0 +1,64 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+For VLM cells the text length is (seq_len - n_patches) and the patch embeddings
+arrive precomputed (the modality frontend is a stub per the assignment).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeCell
+from repro.models import transformer as T
+
+__all__ = ["train_input_specs", "prefill_input_specs", "decode_input_specs",
+           "params_shapes", "opt_shapes", "cache_shapes"]
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _token_shape(cfg: ArchConfig, batch: int, seq: int) -> tuple:
+    if cfg.n_codebooks:
+        return (batch, seq, cfg.n_codebooks)
+    return (batch, seq)
+
+
+def train_input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    b, s = cell.global_batch, cell.seq_len
+    s_text = s - cfg.n_patches if cfg.frontend == "patch" else s
+    out = {
+        "tokens": SDS(_token_shape(cfg, b, s_text), jnp.int32),
+        "labels": SDS(_token_shape(cfg, b, s_text), jnp.int32),
+    }
+    if cfg.frontend == "patch":
+        out["patch_embeds"] = SDS((b, cfg.n_patches, cfg.patch_dim), jnp.bfloat16)
+    return out
+
+
+def prefill_input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    b, s = cell.global_batch, cell.seq_len
+    s_text = s - cfg.n_patches if cfg.frontend == "patch" else s
+    out = {"tokens": SDS(_token_shape(cfg, b, s_text), jnp.int32)}
+    if cfg.frontend == "patch":
+        out["patch_embeds"] = SDS((b, cfg.n_patches, cfg.patch_dim), jnp.bfloat16)
+    return out
+
+
+def decode_input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict:
+    return {"tokens": SDS(_token_shape(cfg, cell.global_batch, 1), jnp.int32)}
+
+
+def params_shapes(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda k: T.init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+
+
+def opt_shapes(cfg: ArchConfig, opt_cfg, params_sds):
+    from repro.optim import adamw_init
+    return jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_sds)
+
+
+def cache_shapes(cfg: ArchConfig, cell: ShapeCell, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, cell.global_batch, cell.seq_len, dtype))

@@ -1,0 +1,424 @@
+"""GQA attention — TP-aware head layout, RoPE, SWA, chunked (flash-style) softmax,
+decode with (optionally int8-quantized) KV caches.
+
+TP head layout (DESIGN.md §5):
+  * MHA (hq == hkv) with hq % tp != 0  → pad BOTH to the next multiple of tp;
+    padded q heads have zero wq columns and zero wo rows (exact: their output
+    contribution is zero), padded kv heads duplicate the first logical heads.
+  * GQA (hkv < hq) → require hq % tp == 0 (true for all assigned archs);
+    duplicate kv heads by F = max(tp, hkv)/hkv (exact: each q group still reads its
+    own logical kv head — standard GQA tensor-parallel practice).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import apply_rope
+
+NEG_INF = -1e30
+
+__all__ = ["AttnDims", "init_attention", "attention_train", "attention_decode",
+           "init_attention_cache", "attn_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    """Logical + physical (TP-padded) head layout."""
+
+    d_model: int
+    n_q: int           # logical query heads
+    n_kv: int          # logical kv heads
+    d_head: int
+    tp: int = 1
+
+    @property
+    def n_q_phys(self) -> int:
+        if self.n_q % self.tp:
+            if self.n_q != self.n_kv:
+                raise ValueError("GQA archs must have n_q % tp == 0")
+            return math.ceil(self.n_q / self.tp) * self.tp
+        return self.n_q
+
+    @property
+    def n_kv_phys(self) -> int:
+        if self.n_q % self.tp:  # MHA padding case: keep layout aligned with q
+            return self.n_q_phys
+        if self.n_kv >= self.tp:
+            return math.ceil(self.n_kv / self.tp) * self.tp
+        if self.tp % self.n_kv:
+            raise ValueError(f"tp={self.tp} not a multiple of n_kv={self.n_kv}")
+        return self.tp
+
+    @property
+    def rep_phys(self) -> int:
+        assert self.n_q_phys % self.n_kv_phys == 0
+        return self.n_q_phys // self.n_kv_phys
+
+    def kv_logical_index(self, j: int) -> int:
+        """Which logical kv head physical slot j holds."""
+        if self.n_q % self.tp:          # MHA pad: wrap
+            return j % self.n_kv
+        f = self.n_kv_phys // self.n_kv  # GQA dup
+        return j // f
+
+
+def init_attention(rng, dims: AttnDims, dtype, *, qkv_bias: bool = False) -> dict:
+    """Physical weights built from logical initializations (TP-exact expansion)."""
+    d, dh = dims.d_model, dims.d_head
+    kq, kk, kv, ko = jax.random.split(rng, 4)
+    s = float(1.0 / np.sqrt(d))
+    wq_l = jax.random.normal(kq, (d, dims.n_q, dh), dtype) * s
+    wk_l = jax.random.normal(kk, (d, dims.n_kv, dh), dtype) * s
+    wv_l = jax.random.normal(kv, (d, dims.n_kv, dh), dtype) * s
+    wo_l = jax.random.normal(ko, (dims.n_q, dh, d), dtype) * float(1.0 / np.sqrt(dims.n_q * dh))
+
+    # expand to physical
+    nq_p, nkv_p = dims.n_q_phys, dims.n_kv_phys
+    wq = jnp.zeros((d, nq_p, dh), dtype).at[:, :dims.n_q].set(wq_l)
+    wo = jnp.zeros((nq_p, dh, d), dtype).at[:dims.n_q].set(wo_l)
+    kv_map = np.array([dims.kv_logical_index(j) for j in range(nkv_p)])
+    wk = wk_l[:, kv_map]
+    wv = wv_l[:, kv_map]
+    p = {"wq": wq.reshape(d, nq_p * dh), "wk": wk.reshape(d, nkv_p * dh),
+         "wv": wv.reshape(d, nkv_p * dh), "wo": wo.reshape(nq_p * dh, d)}
+    if qkv_bias:
+        kb1, kb2, kb3 = jax.random.split(rng, 3)
+        bq_l = jax.random.normal(kb1, (dims.n_q, dh), dtype) * 0.01
+        bk_l = jax.random.normal(kb2, (dims.n_kv, dh), dtype) * 0.01
+        bv_l = jax.random.normal(kb3, (dims.n_kv, dh), dtype) * 0.01
+        bq = jnp.zeros((nq_p, dh), dtype).at[:dims.n_q].set(bq_l)
+        p["bq"] = bq.reshape(nq_p * dh)
+        p["bk"] = bk_l[kv_map].reshape(nkv_p * dh)
+        p["bv"] = bv_l[kv_map].reshape(nkv_p * dh)
+    return p
+
+
+def _project_qkv(params, x, dims: AttnDims, positions, rope_theta):
+    b, s, _ = x.shape
+    dh = dims.d_head
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, dims.n_q_phys, dh)
+    k = k.reshape(b, s, dims.n_kv_phys, dh)
+    v = v.reshape(b, s, dims.n_kv_phys, dh)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _mask_bias(q_pos, k_pos, swa_window):
+    """(…, Sq, Sk) additive mask: causal (+ sliding window)."""
+    ok = k_pos[None, :] <= q_pos[:, None]
+    if swa_window:
+        ok &= k_pos[None, :] > q_pos[:, None] - swa_window
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, bias):
+    """Grouped scaled-dot-product attention, fp32 softmax.
+
+    q: (B, Sq, G, R, Dh), k/v: (B, Sk, G, Dh), bias: (Sq, Sk) additive.
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", q, k).astype(jnp.float32) * scale
+    scores = scores + bias
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bgrqk,bkgd->bqgrd", p, v)
+
+
+def attention_train(params, x, dims: AttnDims, *, positions=None,
+                    swa_window=None, rope_theta=10000.0, impl="dense",
+                    chunk_q=1024, chunk_k=1024):
+    """Causal self-attention over a full sequence (train / prefill).
+
+    impl='dense'   — materializes (Sq, Sk) scores per head group (small seqs).
+    impl='chunked' — flash-style online softmax, scan over q chunks × kv chunks.
+    Returns (out (B,S,d), k, v) so prefill can build a cache for free.
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(params, x, dims, positions, rope_theta)
+    g, r = dims.n_kv_phys, dims.rep_phys
+    qg = q.reshape(b, s, g, r, dims.d_head)
+
+    if impl == "dense":
+        bias = _mask_bias(jnp.arange(s), jnp.arange(s), swa_window)
+        out = _sdpa(qg, k, v, bias)
+    elif impl == "chunked":
+        out = _chunked_causal(qg, k, v, swa_window, chunk_q, chunk_k)
+    elif impl == "wedge":
+        out = _wedge_causal(qg, k, v, swa_window, chunk_q)
+    elif impl == "pallas":
+        # the fused TPU kernel (kernels/flash_attention.py); interpret mode
+        # executes the kernel body in Python on CPU (tests), Mosaic on TPU
+        from repro.kernels import ops
+        bq = chunk_q
+        while s % bq:
+            bq //= 2
+        bk = chunk_k
+        while s % bk:
+            bk //= 2
+        o = ops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True, swa_window=swa_window,
+            block_q=max(bq, 1), block_k=max(bk, 1))
+        out = o.transpose(0, 2, 1, 3).reshape(b, s, g, r, dims.d_head)
+    else:
+        raise ValueError(impl)
+    out = out.reshape(b, s, dims.n_q_phys * dims.d_head)
+    return out @ params["wo"], k, v
+
+
+def _chunked_causal(qg, k, v, swa_window, chunk_q, chunk_k):
+    """Flash-style attention in pure jnp: O(chunk_q × chunk_k) live scores.
+
+    Baseline schedule visits every (q-chunk, kv-chunk) pair and masks — this costs
+    2× the causal FLOPs; the wedge schedule (perf pass) halves it.
+    """
+    b, s, g, r, dh = qg.shape
+    cq = min(chunk_q, s)
+    while s % cq:
+        cq -= 1
+    ck = min(chunk_k, s)
+    while s % ck:
+        ck -= 1
+    nq, nk = s // cq, s // ck
+    scale = 1.0 / math.sqrt(dh)
+
+    q_chunks = qg.reshape(b, nq, cq, g, r, dh).swapaxes(0, 1)   # (nq,b,cq,g,r,dh)
+    k_chunks = k.reshape(b, nk, ck, g, dh).swapaxes(0, 1)
+    v_chunks = v.reshape(b, nk, ck, g, dh).swapaxes(0, 1)
+
+    def q_body(_, qc_i):
+        qc, qi = qc_i
+        q_pos = qi * cq + jnp.arange(cq)
+
+        def kv_body(carry, kc_i):
+            m, l, acc = carry
+            kc, vc, ki = kc_i
+            k_pos = ki * ck + jnp.arange(ck)
+            sc = jnp.einsum("bqgrd,bkgd->bgrqk", qc, kc).astype(jnp.float32) * scale
+            ok = k_pos[None, :] <= q_pos[:, None]
+            if swa_window:
+                ok &= k_pos[None, :] > q_pos[:, None] - swa_window
+            sc = jnp.where(ok, sc, -1e30)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            pexp = jnp.exp(sc - m_new[..., None])
+            l_new = l * alpha + pexp.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bgrqk,bkgd->bgrqd", pexp.astype(qc.dtype), vc).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, g, r, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, g, r, cq), jnp.float32)
+        a0 = jnp.zeros((b, g, r, cq, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_body, (m0, l0, a0), (k_chunks, v_chunks, jnp.arange(nk)))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None])
+        return None, out.astype(qg.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, (q_chunks, jnp.arange(nq)))
+    # outs: (nq, b, g, r, cq, dh) -> (b, s, g, r, dh)
+    outs = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, g, r, dh)
+    return outs
+
+
+def _wedge_causal(qg, k, v, swa_window, chunk):
+    """Causal-FLOP-optimal chunked attention in pure JAX (the "wedge" trick).
+
+    Pair q-chunk p with q-chunk nq-1-p: together they need exactly nq+1
+    kv-chunk visits (p+1 for the low chunk, nq-p for the high one) — a
+    CONSTANT inner trip count, so a lax.scan expresses the triangular
+    schedule without masking away half the work.  Executed score FLOPs are
+    (nq+1)/(2·nq) of the all-pairs baseline (≈ the true causal half).
+    """
+    b, s, g, r, dh = qg.shape
+    cq = min(chunk, s)
+    while s % cq:
+        cq -= 1
+    nq = s // cq
+    if nq % 2:  # odd chunk counts: fall back to the all-pairs schedule
+        return _chunked_causal(qg, k, v, swa_window, cq, cq)
+    scale = 1.0 / math.sqrt(dh)
+
+    q_chunks = qg.reshape(b, nq, cq, g, r, dh).swapaxes(0, 1)
+    k_chunks = k.reshape(b, nq, cq, g, dh).swapaxes(0, 1)
+    v_chunks = v.reshape(b, nq, cq, g, dh).swapaxes(0, 1)
+    pairs = nq // 2
+
+    def pair_body(_, p):
+        q_lo = q_chunks[p]                       # dynamic (traced) index OK
+        q_hi = jax.lax.dynamic_index_in_dim(q_chunks, nq - 1 - p, 0,
+                                            keepdims=False)
+        lo_pos = p * cq + jnp.arange(cq)
+        hi_pos = (nq - 1 - p) * cq + jnp.arange(cq)
+
+        def kv_body(carry, t):
+            m, l, acc = carry                    # (2, b, g, r, cq[, dh])
+            is_hi = t > p
+            kv_idx = jnp.where(is_hi, t - p - 1, t)
+            kc = jax.lax.dynamic_index_in_dim(k_chunks, kv_idx, 0,
+                                              keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(v_chunks, kv_idx, 0,
+                                              keepdims=False)
+            qc = jnp.where(is_hi, q_hi, q_lo)
+            q_pos = jnp.where(is_hi, hi_pos, lo_pos)
+            k_pos = kv_idx * cq + jnp.arange(cq)
+            sc = jnp.einsum("bqgrd,bkgd->bgrqk", qc,
+                            kc).astype(jnp.float32) * scale
+            ok = k_pos[None, :] <= q_pos[:, None]
+            if swa_window:
+                ok &= k_pos[None, :] > q_pos[:, None] - swa_window
+            sc = jnp.where(ok, sc, NEG_INF)
+            side = is_hi.astype(jnp.int32)
+            m_s = jax.lax.dynamic_index_in_dim(m, side, 0, keepdims=False)
+            l_s = jax.lax.dynamic_index_in_dim(l, side, 0, keepdims=False)
+            a_s = jax.lax.dynamic_index_in_dim(acc, side, 0, keepdims=False)
+            m_new = jnp.maximum(m_s, sc.max(axis=-1))
+            alpha = jnp.exp(m_s - m_new)
+            pexp = jnp.exp(sc - m_new[..., None])
+            l_new = l_s * alpha + pexp.sum(axis=-1)
+            a_new = a_s * alpha[..., None] + jnp.einsum(
+                "bgrqk,bkgd->bgrqd", pexp.astype(qc.dtype),
+                vc).astype(jnp.float32)
+            m = jax.lax.dynamic_update_index_in_dim(m, m_new, side, 0)
+            l = jax.lax.dynamic_update_index_in_dim(l, l_new, side, 0)
+            acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, side, 0)
+            return (m, l, acc), None
+
+        m0 = jnp.full((2, b, g, r, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((2, b, g, r, cq), jnp.float32)
+        a0 = jnp.zeros((2, b, g, r, cq, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), jnp.arange(nq + 1))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(qg.dtype)        # (2, b, g, r, cq, dh)
+
+    _, outs = jax.lax.scan(pair_body, None, jnp.arange(pairs))
+    # outs: (pairs, 2, b, g, r, cq, dh) — row 0 = chunk p, row 1 = chunk nq-1-p
+    lo = outs[:, 0]                               # (pairs, b, g, r, cq, dh)
+    hi = outs[:, 1][::-1]                         # reverse to chunk order
+    full = jnp.concatenate([lo, hi], axis=0)      # (nq, b, g, r, cq, dh)
+    return full.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, g, r, dh)
+
+
+# ------------------------------------------------------------- decode -------
+
+def init_attention_cache(batch: int, max_len: int, dims: AttnDims, dtype,
+                         *, kv_quant: bool = False, swa_window=None) -> dict:
+    """Cache pytree. SWA archs use a ring buffer of size window."""
+    length = min(max_len, swa_window) if swa_window else max_len
+    g, dh = dims.n_kv_phys, dims.d_head
+    if kv_quant:
+        cache = {"k_q": jnp.zeros((batch, length, g, dh), jnp.int8),
+                 "v_q": jnp.zeros((batch, length, g, dh), jnp.int8),
+                 "k_s": jnp.zeros((batch, length, g, 1), jnp.float32),
+                 "v_s": jnp.zeros((batch, length, g, 1), jnp.float32)}
+    else:
+        cache = {"k": jnp.zeros((batch, length, g, dh), dtype),
+                 "v": jnp.zeros((batch, length, g, dh), dtype)}
+    if swa_window:
+        cache["slot_pos"] = jnp.full((length,), -1, jnp.int32)
+    return cache
+
+
+def _quantize_kv(x):
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def fill_attention_cache(cache: dict, k, v, *, swa_window=None) -> dict:
+    """Write prefill k/v (B, S, g, dh) into a fresh cache (positions 0..S-1)."""
+    s = k.shape[1]
+    length = cache["k_q" if "k_q" in cache else "k"].shape[1]
+    if swa_window and s > length:
+        k, v = k[:, -length:], v[:, -length:]
+        start = s - length
+    else:
+        start = 0
+    n = k.shape[1]
+    if "k_q" in cache:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        cache = dict(cache)
+        cache["k_q"] = cache["k_q"].at[:, :n].set(kq)
+        cache["v_q"] = cache["v_q"].at[:, :n].set(vq)
+        cache["k_s"] = cache["k_s"].at[:, :n].set(ks)
+        cache["v_s"] = cache["v_s"].at[:, :n].set(vs)
+    else:
+        cache = dict(cache)
+        cache["k"] = cache["k"].at[:, :n].set(k.astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[:, :n].set(v.astype(cache["v"].dtype))
+    if "slot_pos" in cache:
+        cache["slot_pos"] = cache["slot_pos"].at[:n].set(start + jnp.arange(n))
+    return cache
+
+
+def attention_decode(params, x, cache: dict, pos, dims: AttnDims, *,
+                     swa_window=None, rope_theta=10000.0):
+    """One-token decode. x: (B, 1, d); pos: scalar int32 current position.
+
+    Returns (out (B,1,d), new_cache).
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, dims, positions, rope_theta)
+    g, r, dh = dims.n_kv_phys, dims.rep_phys, dims.d_head
+    qg = q.reshape(b, 1, g, r, dh)
+
+    length = (cache["k"] if "k" in cache else cache["k_q"]).shape[1]
+    slot = (pos % length) if swa_window else pos
+    cache = dict(cache)
+    if "k_q" in cache:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        cache["k_q"] = jax.lax.dynamic_update_slice_in_dim(cache["k_q"], kq, slot, 1)
+        cache["v_q"] = jax.lax.dynamic_update_slice_in_dim(cache["v_q"], vq, slot, 1)
+        cache["k_s"] = jax.lax.dynamic_update_slice_in_dim(cache["k_s"], ks, slot, 1)
+        cache["v_s"] = jax.lax.dynamic_update_slice_in_dim(cache["v_s"], vs, slot, 1)
+        k_all = cache["k_q"].astype(jnp.float32) * cache["k_s"]
+        v_all = cache["v_q"].astype(jnp.float32) * cache["v_s"]
+        k_all = k_all.astype(x.dtype)
+        v_all = v_all.astype(x.dtype)
+    else:
+        kd = k_new.astype(cache["k"].dtype)
+        vd = v_new.astype(cache["v"].dtype)
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], kd, slot, 1)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vd, slot, 1)
+        k_all, v_all = cache["k"], cache["v"]
+
+    if swa_window:
+        cache["slot_pos"] = jax.lax.dynamic_update_slice(
+            cache["slot_pos"], jnp.full((1,), pos, jnp.int32), (slot,))
+        sp = cache["slot_pos"]
+        valid = (sp >= 0) & (sp <= pos) & (sp > pos - swa_window)
+    else:
+        valid = jnp.arange(length) <= pos
+
+    scale = 1.0 / math.sqrt(dh)
+    sc = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k_all).astype(jnp.float32) * scale
+    sc = jnp.where(valid[None, None, None, None, :], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p, v_all)
+    out = out.reshape(b, 1, dims.n_q_phys * dh)
+    return out @ params["wo"], cache
+
+
+def attn_flops(dims: AttnDims, tokens: int, kv_len: int, *, causal=True) -> float:
+    """MODEL flops for attention (projections + scores + pv), logical heads."""
+    d, hq, hkv, dh = dims.d_model, dims.n_q, dims.n_kv, dims.d_head
+    proj = 2.0 * tokens * d * dh * (hq + 2 * hkv) + 2.0 * tokens * hq * dh * d
+    eff_kv = kv_len / 2 if causal and kv_len == tokens else kv_len
+    sdp = 2.0 * 2.0 * tokens * hq * dh * eff_kv
+    return proj + sdp

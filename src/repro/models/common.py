@@ -1,0 +1,156 @@
+"""Shared layers: norms, RoPE, MLPs, embeddings, chunked cross-entropy.
+
+Everything is a pure function over explicit param pytrees (dicts of jnp arrays) —
+no framework.  Initializers return (params, partition-rule hints are built separately
+in parallel/sharding.py and structurally tested against these trees).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ----------------------------------------------------------------- norms ----
+
+def rms_norm(x, scale, *, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        out = out * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm_nonparam(x, _unused=None, *, eps=1e-5):
+    """OLMo's non-parametric LayerNorm: no scale, no bias."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def make_norm(kind: str):
+    if kind == "rms":
+        return rms_norm
+    if kind == "ln_nonparam":
+        return layer_norm_nonparam
+    raise ValueError(kind)
+
+
+def init_norm(kind: str, d: int, dtype) -> dict:
+    if kind == "rms":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {}  # non-parametric
+
+
+def apply_norm(kind: str, params: dict, x):
+    return make_norm(kind)(x, params.get("scale"))
+
+
+# ------------------------------------------------------------------ RoPE ----
+
+def rope_frequencies(d_head: int, theta: float = 10000.0) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float64) / d_head))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    d_head = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d_head, theta), jnp.float32)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MLPs ----
+
+def _act(kind: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu2": lambda x: jnp.square(jax.nn.relu(x))}[kind]
+
+
+def init_mlp(rng, d: int, ff: int, kind: str, dtype) -> dict:
+    """kind: 'swiglu' | 'geglu' | 'relu2' | 'gelu'."""
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s_in = float(1.0 / np.sqrt(d))
+    s_out = float(1.0 / np.sqrt(ff))
+    p = {"wi": jax.random.normal(k1, (d, ff), dtype) * s_in,
+         "wo": jax.random.normal(k2, (ff, d), dtype) * s_out}
+    if kind in ("swiglu", "geglu"):
+        p["wg"] = jax.random.normal(k3, (d, ff), dtype) * s_in
+    return p
+
+
+def apply_mlp(params: dict, x, kind: str):
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+        h = act(x @ params["wg"]) * (x @ params["wi"])
+    else:
+        h = _act(kind)(x @ params["wi"])
+    return h @ params["wo"]
+
+
+def mlp_flops(d: int, ff: int, kind: str, tokens: int) -> float:
+    n_mats = 3 if kind in ("swiglu", "geglu") else 2
+    return 2.0 * n_mats * d * ff * tokens
+
+
+# ------------------------------------------------- chunked cross-entropy ----
+
+def chunked_cross_entropy(hidden, labels, lm_head, *, chunk: int = 2048,
+                          norm_kind: str = "rms", norm_params: dict | None = None):
+    """Mean NLL over labels >= 0; logits never materialized beyond one chunk.
+
+    hidden: (B, S, d) pre-final-norm activations; lm_head: (d, V).
+    The per-chunk computation is rematerialized in the backward pass.
+    """
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1  # largest divisor <= requested
+    n_chunks = s // chunk
+
+    hid = hidden.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)     # (n, B, c, d)
+    lab = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)        # (n, B, c)
+
+    @jax.checkpoint
+    def chunk_loss(h_c, l_c):
+        if norm_params is not None:
+            h_c = apply_norm(norm_kind, norm_params, h_c)
+        logits = (h_c @ lm_head).astype(jnp.float32)               # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(l_c, 0)[..., None], axis=-1)[..., 0]
+        valid = (l_c >= 0)
+        nll = jnp.where(valid, lse - tgt, 0.0)
+        return nll.sum(), valid.sum()
+
+    def body(carry, xs):
+        h_c, l_c = xs
+        loss, cnt = chunk_loss(h_c, l_c)
+        return (carry[0] + loss, carry[1] + cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.int32(0)),
+                                 (hid, lab))
+    return tot / jnp.maximum(cnt, 1)
+
+
+# ------------------------------------------------------------- embedding ----
+
+def init_embedding(rng, vocab: int, d: int, dtype, n_codebooks: int = 0) -> dict:
+    if n_codebooks:
+        emb = jax.random.normal(rng, (n_codebooks, vocab, d), dtype) * 0.02
+    else:
+        emb = jax.random.normal(rng, (vocab, d), dtype) * 0.02
+    return {"table": emb}
+
+
+def embed_tokens(params: dict, tokens):
+    table = params["table"]
+    if table.ndim == 3:  # codebooks: tokens (..., K)
+        k = table.shape[0]
+        outs = [jnp.take(table[i], tokens[..., i], axis=0) for i in range(k)]
+        return sum(outs)
+    return jnp.take(table, tokens, axis=0)

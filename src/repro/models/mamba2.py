@@ -1,0 +1,245 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD: the sequence is split into chunks; within a chunk the recurrence is the
+quadratic "attention-like" masked form, across chunks a small carried state
+(B, H, P, N) propagates — linear in S, matmul-rich (MXU-friendly), and the chunk
+loop is a lax.scan (compile size O(1) in sequence length).
+
+Projections are SEPARATE parameters (wz/wx/wb/wc/wdt instead of one fused in_proj)
+so tensor parallelism can shard the head dimension (z/x/dt outputs) over the model
+axis while keeping the head-shared B/C projections replicated — a fused output dim
+would mix sharded and replicated slices (DESIGN.md §5).
+
+Decode is the O(1) recurrence: h = exp(dt·A)·h + dt·B⊗x ; y = C·h + D·x.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import rms_norm
+
+__all__ = ["SSMConfig", "init_mamba", "mamba_train", "mamba_prefill",
+           "mamba_decode", "init_mamba_cache", "mamba_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+    @property
+    def d_bc(self) -> int:
+        return 2 * self.n_groups * self.d_state
+
+
+def init_mamba(rng, cfg: SSMConfig, dtype) -> dict:
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.n_heads
+    gn = cfg.n_groups * cfg.d_state
+    keys = jax.random.split(rng, 8)
+    s = float(1.0 / np.sqrt(d))
+    dt_init = np.exp(np.random.default_rng(0).uniform(
+        np.log(1e-3), np.log(1e-1), h))
+    return {
+        "wz": jax.random.normal(keys[0], (d, di), dtype) * s,
+        "wx": jax.random.normal(keys[1], (d, di), dtype) * s,
+        "wb": jax.random.normal(keys[2], (d, gn), dtype) * s,
+        "wc": jax.random.normal(keys[3], (d, gn), dtype) * s,
+        "wdt": jax.random.normal(keys[4], (d, h), dtype) * s,
+        "conv_wx": jax.random.normal(keys[5], (cfg.d_conv, di), dtype) * 0.2,
+        "conv_bx": jnp.zeros((di,), dtype),
+        "conv_wbc": jax.random.normal(keys[6], (cfg.d_conv, 2 * gn), dtype) * 0.2,
+        "conv_bbc": jnp.zeros((2 * gn,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "dt_bias": jnp.asarray(np.log(np.expm1(dt_init)), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(keys[7], (di, d), dtype) * float(1.0 / np.sqrt(di)),
+    }
+
+
+def _causal_conv_train(xs, w, b):
+    """Depthwise causal conv over (B, S, C): k taps, left-padded."""
+    k = w.shape[0]
+    pad = jnp.pad(xs, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xs.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(x, dt, a_log, b_mat, c_mat, d_skip, cfg: SSMConfig):
+    """Chunked SSD: one lax.scan over chunks, carried state (B,G,R,P,N).
+
+    x: (B,S,H,P)  dt: (B,S,H) (post-softplus)  b_mat/c_mat: (B,S,G,N)
+    Heads factor as H = G·R so B/C are never repeated per head.
+    Returns y: (B,S,H,P), final_state: (B,H,P,N).  All decays are exp of
+    non-positive sums (A < 0) — numerically bounded by 1.
+    """
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    q = min(cfg.chunk, s)
+    while s % q:
+        q -= 1
+    nc = s // q
+    r = h // g
+    a = -jnp.exp(a_log)                                     # (H,) negative
+    dta = (dt * a).astype(jnp.float32)                      # (B,S,H)
+
+    # chunk-major inputs: (nc, B, q, …)
+    def cm(t, shape):
+        return t.reshape((bsz, nc, q) + shape).swapaxes(0, 1)
+
+    xc_all = cm(x, (g, r, p))
+    dtc_all = cm(dt.astype(jnp.float32), (g, r))
+    dtac_all = cm(dta, (g, r))
+    bc_all = cm(b_mat, (g, n))
+    cc_all = cm(c_mat, (g, n))
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    def body(hprev, inp):
+        xc, dtc, dtac, bc, cc = inp          # (B,q,g,r,p) (B,q,g,r) … (B,q,g,n)
+        seg = jnp.cumsum(dtac, axis=1)                       # (B,q,g,r)
+        li = seg[:, :, None] - seg[:, None, :, :]            # (B,q,q,g,r)
+        decay = jnp.where(tri[None, :, :, None, None], jnp.exp(li), 0.0)
+        scores = jnp.einsum("bign,bjgn->bijg",
+                            cc.astype(jnp.float32), bc.astype(jnp.float32))
+        y_intra = jnp.einsum("bijg,bijgr,bjgr,bjgrp->bigrp",
+                             scores, decay, dtc, xc.astype(jnp.float32))
+        entry = jnp.exp(seg)                                 # (B,q,g,r)
+        y_inter = jnp.einsum("bigr,bign,bgrpn->bigrp",
+                             entry, cc.astype(jnp.float32), hprev)
+        tail = jnp.exp(seg[:, -1:] - seg)                    # (B,q,g,r)
+        state = jnp.einsum("bjgr,bjgr,bjgn,bjgrp->bgrpn",
+                           tail, dtc, bc.astype(jnp.float32),
+                           xc.astype(jnp.float32))
+        hnew = hprev * jnp.exp(seg[:, -1])[..., None, None] + state
+        return hnew, (y_intra + y_inter).astype(x.dtype)
+
+    h0 = jnp.zeros((bsz, g, r, p, n), jnp.float32)
+    hlast, ys = jax.lax.scan(
+        body, h0, (xc_all, dtc_all, dtac_all, bc_all, cc_all))
+    y = ys.swapaxes(0, 1).reshape(bsz, s, h, p)
+    y = y + x * d_skip[None, None, :, None].astype(x.dtype)
+    return y.astype(x.dtype), hlast.reshape(bsz, h, p, n)
+
+
+def _project(params, u, cfg: SSMConfig):
+    """u: (B,S,d) -> z (B,S,di), x_raw (B,S,di), bc_raw (B,S,2GN), dt (B,S,H)."""
+    z = u @ params["wz"]
+    x_raw = u @ params["wx"]
+    bc_raw = jnp.concatenate([u @ params["wb"], u @ params["wc"]], axis=-1)
+    dt = u @ params["wdt"]
+    return z, x_raw, bc_raw, dt
+
+
+def _run_ssd(params, z, x_conv, bc_conv, dt, cfg: SSMConfig):
+    bsz, s = z.shape[0], z.shape[1]
+    h, p, g, n = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
+    x = x_conv.reshape(bsz, s, h, p)
+    b_mat = bc_conv[..., :g * n].reshape(bsz, s, g, n)
+    c_mat = bc_conv[..., g * n:].reshape(bsz, s, g, n)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    y, hlast = _ssd_chunked(x, dtp, params["a_log"], b_mat, c_mat,
+                            params["d_skip"], cfg)
+    y = y.reshape(bsz, s, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_scale"])
+    return y @ params["out_proj"], hlast
+
+
+def mamba_train(params, u, cfg: SSMConfig):
+    """Full-sequence SSD. u: (B,S,d) -> (y: (B,S,d), final_state)."""
+    z, x_raw, bc_raw, dt = _project(params, u, cfg)
+    x_conv = _causal_conv_train(x_raw, params["conv_wx"], params["conv_bx"])
+    bc_conv = _causal_conv_train(bc_raw, params["conv_wbc"], params["conv_bbc"])
+    return _run_ssd(params, z, x_conv, bc_conv, dt, cfg)
+
+
+def mamba_prefill(params, u, cfg: SSMConfig):
+    """Full-sequence SSD returning a decode-ready cache.
+
+    Conv caches hold the last (d_conv-1) RAW (pre-conv, pre-activation) values —
+    matching mamba_decode's rolling-window semantics.
+    """
+    bsz, s, _ = u.shape
+    k = cfg.d_conv - 1
+    z, x_raw, bc_raw, dt = _project(params, u, cfg)
+
+    def tail(t, width):
+        if s >= k:
+            return t[:, s - k:, :]
+        return jnp.concatenate(
+            [jnp.zeros((bsz, k - s, width), t.dtype), t], axis=1)
+
+    cache_x = tail(x_raw, cfg.d_inner)
+    cache_bc = tail(bc_raw, cfg.d_bc)
+    x_conv = _causal_conv_train(x_raw, params["conv_wx"], params["conv_bx"])
+    bc_conv = _causal_conv_train(bc_raw, params["conv_wbc"], params["conv_bbc"])
+    out, hlast = _run_ssd(params, z, x_conv, bc_conv, dt, cfg)
+    return out, {"conv_x": cache_x, "conv_bc": cache_bc, "ssm": hlast}
+
+
+def init_mamba_cache(batch: int, cfg: SSMConfig, dtype) -> dict:
+    return {
+        "conv_x": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        "conv_bc": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_bc), dtype),
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                         jnp.float32),
+    }
+
+
+def mamba_decode(params, u, cache: dict, cfg: SSMConfig):
+    """One-token step. u: (B,1,d) -> (y: (B,1,d), new cache)."""
+    bsz = u.shape[0]
+    h, p, g, n = cfg.n_heads, cfg.head_dim, cfg.n_groups, cfg.d_state
+    z, x_raw, bc_raw, dt = _project(params, u, cfg)
+    z, x_raw, bc_raw, dt = z[:, 0], x_raw[:, 0], bc_raw[:, 0], dt[:, 0]
+
+    win_x = jnp.concatenate([cache["conv_x"], x_raw[:, None, :]], axis=1)
+    win_bc = jnp.concatenate([cache["conv_bc"], bc_raw[:, None, :]], axis=1)
+    x_c = jax.nn.silu(jnp.einsum("bkc,kc->bc", win_x, params["conv_wx"])
+                      + params["conv_bx"])
+    bc_c = jax.nn.silu(jnp.einsum("bkc,kc->bc", win_bc, params["conv_wbc"])
+                       + params["conv_bbc"])
+
+    x = x_c.reshape(bsz, h, p)
+    b_vec = jnp.repeat(bc_c[:, :g * n].reshape(bsz, g, n), h // g, axis=1)
+    c_vec = jnp.repeat(bc_c[:, g * n:].reshape(bsz, g, n), h // g, axis=1)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,H)
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dtp * a)                                            # (B,H)
+
+    hnew = (cache["ssm"] * decay[:, :, None, None]
+            + jnp.einsum("bh,bhn,bhp->bhpn", dtp, b_vec.astype(jnp.float32),
+                         x.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bhn->bhp", hnew, c_vec.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * params["d_skip"][None, :, None]
+    y = y.reshape(bsz, cfg.d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_scale"])
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, {"conv_x": win_x[:, 1:], "conv_bc": win_bc[:, 1:], "ssm": hnew}
+
+
+def mamba_flops(cfg: SSMConfig, tokens: int) -> float:
+    d, di, n, h, p = (cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads,
+                      cfg.head_dim)
+    proj = 2.0 * tokens * d * (2 * di + cfg.d_bc + h) + 2.0 * tokens * di * d
+    conv = 2.0 * tokens * cfg.d_conv * (di + cfg.d_bc)
+    q = cfg.chunk
+    ssd = 2.0 * tokens * h * (q * n + q * p + 2 * p * n)
+    return proj + conv + ssd

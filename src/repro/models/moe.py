@@ -1,0 +1,168 @@
+"""Mixture-of-Experts FFN — capacity-based scatter dispatch (pjit-friendly).
+
+Dispatch avoids the GShard (T, E, C) one-hot tensor: tokens are ranked within their
+expert by a (T·k, E) cumsum, scattered into an (E, C, d) buffer (unique indices,
+overflow dropped), processed by batched expert einsums, and gathered back.  The
+scatter/gather over a data-sharded token dim and a capacity-sharded buffer is exactly
+expert-parallel all-to-all traffic under GSPMD.
+
+Shared experts (Qwen2-MoE style) are a dense FFN added unconditionally.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import apply_mlp, init_mlp
+
+__all__ = ["MoEConfig", "init_moe", "apply_moe", "moe_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0           # number of always-on shared experts
+    d_ff_shared: int = 0        # total shared hidden size (n_shared * d_ff_expert)
+    capacity_factor: float = 1.25
+    mlp_kind: str = "swiglu"
+    router_aux_weight: float = 0.01
+    # dispatch groups: ranking/scatter happen independently per group so nothing
+    # (cumsum, scatter) ever crosses the data-sharded token dim.  Set to the DP
+    # shard count in distributed runs; 1 on a single device.
+    dispatch_groups: int = 1
+    group_axis: str | None = None   # mesh axis to shard groups over (e.g. 'data')
+    # true expert parallelism: shard the expert dim of the weights over this
+    # axis (requires n_experts % axis_size == 0).  The dispatch buffer is then
+    # resharded group-axis <-> expert-axis around the expert einsums — the
+    # classic EP all-to-all — instead of moving expert WEIGHTS.
+    expert_axis: str | None = None
+
+
+def init_moe(rng, d: int, cfg: MoEConfig, dtype) -> dict:
+    kr, ke, ks = jax.random.split(rng, 3)
+    e, ff = cfg.n_experts, cfg.d_ff_expert
+    s_in, s_out = float(1.0 / np.sqrt(d)), float(1.0 / np.sqrt(ff))
+    k1, k2, k3 = jax.random.split(ke, 3)
+    p = {
+        "router": jax.random.normal(kr, (d, e), jnp.float32) * s_in,
+        "wi": jax.random.normal(k1, (e, d, ff), dtype) * s_in,
+        "wo": jax.random.normal(k2, (e, ff, d), dtype) * s_out,
+    }
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        p["wg"] = jax.random.normal(k3, (e, d, ff), dtype) * s_in
+    if cfg.n_shared:
+        ff_s = cfg.d_ff_shared or cfg.n_shared * ff
+        p["shared"] = init_mlp(ks, d, ff_s, cfg.mlp_kind, dtype)
+    return p
+
+
+def _capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(np.ceil(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def _dispatch_one_group(params, xg, cfg: MoEConfig, cap: int):
+    """xg: (gs, d) -> (expert buffer (E, cap, d), combine metadata)."""
+    gs, d = xg.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = (xg.astype(jnp.float32) @ params["router"])          # (gs, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                          # (gs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    e_flat = idx.reshape(-1)                                      # (gs*k,)
+    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot                   # rank before me
+    pos = jnp.take_along_axis(ranks, e_flat[:, None], axis=1)[:, 0]
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, cap)                             # drop overflow
+
+    buf = jnp.zeros((e, cap, d), xg.dtype)
+    src = xg[jnp.repeat(jnp.arange(gs), k)]
+    buf = buf.at[e_flat, pos_c].add(src, mode="drop")
+    meta = (e_flat, pos_c, keep, gates, probs, onehot)
+    return buf, meta
+
+
+def _combine_one_group(h, meta, gs, d, cfg: MoEConfig):
+    e_flat, pos_c, keep, gates, probs, onehot = meta
+    cap = h.shape[1]
+    out_slots = h[e_flat, jnp.minimum(pos_c, cap - 1)]            # (gs*k, d)
+    out_slots = jnp.where(keep[:, None], out_slots, 0.0)
+    w = gates.reshape(-1)[:, None].astype(h.dtype)
+    out = (out_slots * w).reshape(gs, cfg.top_k, d).sum(axis=1)
+    # Switch-style load-balance aux (per group)
+    me = probs.mean(axis=0)
+    ce = onehot.sum(axis=0).astype(jnp.float32) / max(out_slots.shape[0], 1)
+    aux = cfg.router_aux_weight * cfg.n_experts * jnp.sum(me * ce)
+    return out, aux
+
+
+def apply_moe(params: dict, x, cfg: MoEConfig, *, capacity: int | None = None):
+    """x: (T, d) -> (out (T, d), aux_loss scalar).
+
+    Dispatch is per-group (vmap over cfg.dispatch_groups): ranking cumsums and
+    scatters never cross the group boundary, so with groups sharded over the DP
+    axis all dispatch data movement is shard-local; only the expert einsums see
+    the model axis.  Groups = 1 reproduces the classic single-pool behaviour.
+    """
+    t, d = x.shape
+    g = cfg.dispatch_groups
+    if t % g:
+        g = 1
+    gs = t // g
+    cap = capacity if capacity is not None else _capacity(gs, cfg)
+
+    xg = x.reshape(g, gs, d)
+    if cfg.group_axis:
+        from jax.sharding import PartitionSpec as P
+        xg = jax.lax.with_sharding_constraint(xg, P(cfg.group_axis, None, None))
+
+    bufs, metas = jax.vmap(
+        lambda xx: _dispatch_one_group(params, xx, cfg, cap))(xg)
+    if cfg.group_axis:
+        from jax.sharding import PartitionSpec as P
+        bufs = jax.lax.with_sharding_constraint(
+            bufs, P(cfg.group_axis, None, None, None))
+
+    ffn_params = {kk: params[kk] for kk in ("wi", "wg", "wo") if kk in params}
+    if cfg.expert_axis:
+        # EP: reshard buffer G-sharded -> E-sharded (all-to-all), compute with
+        # stationary expert weights, reshard back for the combine
+        from jax.sharding import PartitionSpec as P
+        bufs = jax.lax.with_sharding_constraint(
+            bufs, P(None, cfg.expert_axis, None, None))
+        h = apply_mlp(ffn_params, bufs, cfg.mlp_kind)             # (G, E, cap, d)
+        h = jax.lax.with_sharding_constraint(
+            h, P(cfg.group_axis, None, None, None)
+            if cfg.group_axis else P(None, None, None, None))
+    else:
+        h = apply_mlp(ffn_params, bufs, cfg.mlp_kind)             # (G, E, cap, d)
+
+    outs, auxs = jax.vmap(
+        lambda hh, mm: _combine_one_group(hh, mm, gs, d, cfg))(h, metas)
+    out = outs.reshape(t, d)
+    if cfg.group_axis:
+        from jax.sharding import PartitionSpec as P
+        out = jax.lax.with_sharding_constraint(
+            out.reshape(g, gs, d), P(cfg.group_axis, None, None)).reshape(t, d)
+
+    if "shared" in params:
+        out = out + apply_mlp(params["shared"], x, cfg.mlp_kind)
+    return out, auxs.mean()
+
+
+def moe_flops(d: int, cfg: MoEConfig, tokens: int) -> float:
+    n_mats = 3 if cfg.mlp_kind in ("swiglu", "geglu") else 2
+    active = 2.0 * n_mats * d * cfg.d_ff_expert * tokens * cfg.top_k
+    router = 2.0 * d * cfg.n_experts * tokens
+    shared = 0.0
+    if cfg.n_shared:
+        ff_s = cfg.d_ff_shared or cfg.n_shared * cfg.d_ff_expert
+        shared = 2.0 * n_mats * d * ff_s * tokens
+    return active + router + shared

@@ -1,0 +1,333 @@
+"""Model assembly — decoder-only LM over heterogeneous layer patterns.
+
+One super-block (cfg.pattern) of layers is repeated cfg.n_repeats times via
+jax.lax.scan over stacked parameters: compile size is O(pattern), not O(depth).
+Covers all assigned families: dense / MoE / SSM / hybrid / VLM-stub / audio-stub.
+
+API (pure functions over param pytrees):
+    init_params(cfg, rng, dtype)                 -> params
+    forward(params, cfg, batch)                  -> hidden (B, S, d) pre-final-norm
+    loss_fn(params, cfg, batch)                  -> (loss, metrics)
+    init_cache(cfg, batch, max_len, dtype)       -> cache
+    prefill(params, cfg, batch, cache)           -> (last_logits, cache)
+    decode_step(params, cfg, tokens, cache, pos) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import attention as attn
+from repro.models import mamba2, moe
+from repro.models.common import (apply_mlp, apply_norm, chunked_cross_entropy,
+                                 embed_tokens, init_embedding, init_mlp,
+                                 init_norm)
+
+__all__ = ["init_params", "forward", "loss_fn", "init_cache", "prefill",
+           "decode_step", "model_flops"]
+
+
+def _dims(cfg: ArchConfig) -> attn.AttnDims:
+    return attn.AttnDims(cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+                         tp=cfg.tp)
+
+
+# ------------------------------------------------------------------- init ---
+
+def _init_layer(cfg: ArchConfig, spec: LayerSpec, rng, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    p = {"norm1": init_norm(cfg.norm, cfg.d_model, dtype)}
+    if spec.mixer == "attn":
+        p["attn"] = attn.init_attention(k1, _dims(cfg), dtype,
+                                        qkv_bias=cfg.qkv_bias)
+    elif spec.mixer == "mamba":
+        p["mamba"] = mamba2.init_mamba(k1, cfg.ssm, dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn == "dense":
+        p["norm2"] = init_norm(cfg.norm, cfg.d_model, dtype)
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype)
+    elif spec.ffn == "moe":
+        p["norm2"] = init_norm(cfg.norm, cfg.d_model, dtype)
+        p["moe"] = moe.init_moe(k3, cfg.d_model, cfg.moe, dtype)
+    elif spec.ffn != "none":
+        raise ValueError(spec.ffn)
+    return p
+
+
+def init_params(cfg: ArchConfig, rng, dtype=jnp.float32) -> dict:
+    ke, kb, kh, kf = jax.random.split(rng, 4)
+    params: dict = {
+        "embed": init_embedding(ke, cfg.vocab, cfg.d_model, dtype,
+                                n_codebooks=cfg.n_codebooks),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if cfg.n_codebooks:
+        params["lm_head"] = jax.random.normal(
+            kh, (cfg.n_codebooks, cfg.d_model, cfg.vocab), dtype) * 0.02
+    else:
+        params["lm_head"] = jax.random.normal(
+            kh, (cfg.d_model, cfg.vocab), dtype) * 0.02
+    if cfg.frontend == "patch":
+        params["patch_proj"] = jax.random.normal(
+            kf, (cfg.patch_dim, cfg.d_model), dtype) * float(1.0 / np.sqrt(cfg.patch_dim))
+
+    # stacked blocks: tuple over pattern positions, leading dim = n_repeats
+    blocks = []
+    for j, spec in enumerate(cfg.pattern):
+        reps = []
+        for rep in range(cfg.n_repeats):
+            krep = jax.random.fold_in(jax.random.fold_in(kb, j), rep)
+            reps.append(_init_layer(cfg, spec, krep, dtype))
+        blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *reps))
+    params["blocks"] = tuple(blocks)
+    return params
+
+
+# ---------------------------------------------------------------- forward ---
+
+def _apply_layer_train(cfg: ArchConfig, spec: LayerSpec, p: dict, x, positions):
+    h = apply_norm(cfg.norm, p["norm1"], x)
+    if spec.mixer == "attn":
+        out, _, _ = attn.attention_train(
+            p["attn"], h, _dims(cfg), positions=positions,
+            swa_window=cfg.swa_window, rope_theta=cfg.rope_theta,
+            impl=cfg.attn_impl_train, chunk_q=cfg.attn_chunk_q,
+            chunk_k=cfg.attn_chunk_k)
+    else:
+        out, _ = mamba2.mamba_train(p["mamba"], h, cfg.ssm)
+    x = x + out
+    aux = jnp.float32(0.0)
+    if spec.ffn != "none":
+        h2 = apply_norm(cfg.norm, p["norm2"], x)
+        if spec.ffn == "dense":
+            x = x + apply_mlp(p["mlp"], h2, cfg.mlp_kind)
+        else:
+            b, s, d = h2.shape
+            out2, aux = moe.apply_moe(p["moe"], h2.reshape(b * s, d), cfg.moe)
+            x = x + out2.reshape(b, s, d)
+    return x, aux
+
+
+def _pin_batch(cfg: ArchConfig, x):
+    """Pin the batch dim of an activation tensor to cfg.batch_axes.
+
+    GSPMD loses the batch sharding through the embedding gather (involuntary
+    full rematerialization) and then replicates every activation in the layer
+    scan — a 16x collective blow-up measured in results/perf_log.md iter. 4.
+    """
+    if not cfg.batch_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    axes = tuple(cfg.batch_axes)
+    spec = P(axes if len(axes) > 1 else axes[0],
+             *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _embed_inputs(params, cfg: ArchConfig, batch) -> tuple:
+    """Returns (x (B,S,d), positions (B,S), label_pad) handling frontends."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens)
+    if cfg.frontend == "patch":
+        patches = batch["patch_embeds"] @ params["patch_proj"]
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    x = _pin_batch(cfg, x)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return x, positions
+
+
+def forward(params, cfg: ArchConfig, batch):
+    """Full-sequence forward -> (hidden (B,S,d) pre-final-norm, aux_loss)."""
+    x, positions = _embed_inputs(params, cfg, batch)
+
+    def body(carry, block_params):
+        h, aux = carry
+        h = _pin_batch(cfg, h)
+        for j, spec in enumerate(cfg.pattern):
+            h, a = _apply_layer_train(cfg, spec, block_params[j], h, positions)
+            aux = aux + a
+        return (_pin_batch(cfg, h), aux), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["blocks"])
+    return x, aux
+
+
+def loss_fn(params, cfg: ArchConfig, batch):
+    """Mean next-token NLL (+ MoE aux). batch: tokens, labels (+ frontend extras)."""
+    hidden, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.frontend == "patch":  # patches carry no labels
+        b = labels.shape[0]
+        pad = jnp.full((b, cfg.n_patches), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    if cfg.n_codebooks:
+        losses = []
+        for k in range(cfg.n_codebooks):
+            losses.append(chunked_cross_entropy(
+                hidden, labels[..., k], params["lm_head"][k],
+                chunk=cfg.loss_chunk, norm_kind=cfg.norm,
+                norm_params=params["final_norm"]))
+        loss = sum(losses) / cfg.n_codebooks
+    else:
+        loss = chunked_cross_entropy(
+            hidden, labels, params["lm_head"], chunk=cfg.loss_chunk,
+            norm_kind=cfg.norm, norm_params=params["final_norm"])
+    total = loss + aux
+    return total, {"nll": loss, "aux": aux}
+
+
+# ----------------------------------------------------------------- decode ---
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32):
+    """Cache pytree: tuple over pattern positions, leading dim = n_repeats."""
+    blocks = []
+    for spec in cfg.pattern:
+        if spec.mixer == "attn":
+            one = attn.init_attention_cache(
+                batch, max_len, _dims(cfg), dtype, kv_quant=cfg.kv_quant,
+                swa_window=cfg.swa_window)
+        else:
+            one = mamba2.init_mamba_cache(batch, cfg.ssm, dtype)
+        blocks.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_repeats,) + x.shape).copy(),
+            one))
+    return {"blocks": tuple(blocks), "pos": jnp.int32(0)}
+
+
+def _apply_layer_decode(cfg, spec, p, c, x, pos):
+    h = apply_norm(cfg.norm, p["norm1"], x)
+    if spec.mixer == "attn":
+        out, c = attn.attention_decode(p["attn"], h, c, pos, _dims(cfg),
+                                       swa_window=cfg.swa_window,
+                                       rope_theta=cfg.rope_theta)
+    else:
+        out, c = mamba2.mamba_decode(p["mamba"], h, c, cfg.ssm)
+    x = x + out
+    if spec.ffn != "none":
+        h2 = apply_norm(cfg.norm, p["norm2"], x)
+        if spec.ffn == "dense":
+            x = x + apply_mlp(p["mlp"], h2, cfg.mlp_kind)
+        else:
+            b, s, d = h2.shape
+            out2, _ = moe.apply_moe(p["moe"], h2.reshape(b * s, d), cfg.moe)
+            x = x + out2.reshape(b, s, d)
+    return x, c
+
+
+def decode_step(params, cfg: ArchConfig, tokens, cache):
+    """One token for every sequence in the batch.
+
+    tokens: (B, 1) int32 — or (B, 1, K) for codebook archs.
+    Returns (logits (B, V) or (B, K, V), new cache).
+    """
+    pos = cache["pos"]
+    x = embed_tokens(params["embed"], tokens)
+
+    def body(carry, xs):
+        h = carry
+        h = _pin_batch(cfg, h)
+        block_params, block_cache = xs
+        new_caches = []
+        for j, spec in enumerate(cfg.pattern):
+            h, c = _apply_layer_decode(cfg, spec, block_params[j],
+                                       block_cache[j], h, pos)
+            new_caches.append(c)
+        return h, tuple(new_caches)
+
+    x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+    h = apply_norm(cfg.norm, params["final_norm"], x[:, 0])
+    if cfg.n_codebooks:
+        logits = jnp.einsum("bd,kdv->bkv", h, params["lm_head"])
+    else:
+        logits = h @ params["lm_head"]
+    return logits, {"blocks": new_blocks, "pos": pos + 1}
+
+
+def prefill(params, cfg: ArchConfig, batch, max_len: int, dtype=jnp.float32):
+    """Process a full prompt, build the cache, return last-position logits.
+
+    Runs the train forward (chunked attention) and bulk-fills the caches.
+    """
+    x, positions = _embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    cache = init_cache(cfg, b, max_len, dtype)
+
+    def body(carry, xs):
+        h = carry
+        h = _pin_batch(cfg, h)
+        block_params, block_cache = xs
+        new_caches = []
+        for j, spec in enumerate(cfg.pattern):
+            p = block_params[j]
+            hh = apply_norm(cfg.norm, p["norm1"], h)
+            if spec.mixer == "attn":
+                out, k, v = attn.attention_train(
+                    p["attn"], hh, _dims(cfg), positions=positions,
+                    swa_window=cfg.swa_window, rope_theta=cfg.rope_theta,
+                    impl=cfg.attn_impl_train, chunk_q=cfg.attn_chunk_q,
+                    chunk_k=cfg.attn_chunk_k)
+                c = attn.fill_attention_cache(block_cache[j], k, v,
+                                              swa_window=cfg.swa_window)
+            else:
+                out, c = mamba2.mamba_prefill(p["mamba"], hh, cfg.ssm)
+                c = {"conv_x": c["conv_x"].astype(block_cache[j]["conv_x"].dtype),
+                     "conv_bc": c["conv_bc"].astype(block_cache[j]["conv_bc"].dtype),
+                     "ssm": c["ssm"]}
+            h = h + out
+            if spec.ffn != "none":
+                h2 = apply_norm(cfg.norm, p["norm2"], h)
+                if spec.ffn == "dense":
+                    h = h + apply_mlp(p["mlp"], h2, cfg.mlp_kind)
+                else:
+                    bb, ss, d = h2.shape
+                    out2, _ = moe.apply_moe(p["moe"], h2.reshape(bb * ss, d),
+                                            cfg.moe)
+                    h = h + out2.reshape(bb, ss, d)
+            new_caches.append(c)
+        return h, tuple(new_caches)
+
+    x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+    h = apply_norm(cfg.norm, params["final_norm"], x[:, -1])
+    if cfg.n_codebooks:
+        logits = jnp.einsum("bd,kdv->bkv", h, params["lm_head"])
+    else:
+        logits = h @ params["lm_head"]
+    return logits, {"blocks": new_blocks, "pos": jnp.int32(s)}
+
+
+# ------------------------------------------------------------------ flops ---
+
+def model_flops(cfg: ArchConfig, tokens: int, kv_len: int | None = None,
+                *, mode: str = "train") -> float:
+    """MODEL_FLOPS: 6·N·D for train (fwd+bwd), 2·N_active·D for inference fwd,
+    plus attention score/PV terms."""
+    d = cfg.d_model
+    kv = kv_len if kv_len is not None else tokens
+    dims = _dims(cfg)
+    per_block = 0.0
+    for spec in cfg.pattern:
+        if spec.mixer == "attn":
+            per_block += attn.attn_flops(dims, tokens, kv,
+                                         causal=(mode != "decode"))
+        else:
+            per_block += mamba2.mamba_flops(cfg.ssm, tokens)
+        if spec.ffn == "dense":
+            n_mats = 3 if cfg.mlp_kind in ("swiglu", "geglu") else 2
+            per_block += 2.0 * n_mats * d * cfg.d_ff * tokens
+        elif spec.ffn == "moe":
+            per_block += moe.moe_flops(d, cfg.moe, tokens)
+    total = per_block * cfg.n_repeats
+    heads = max(cfg.n_codebooks, 1)
+    total += 2.0 * tokens * d * cfg.vocab * heads   # lm head
+    total += 2.0 * tokens * d                        # embed lookup ~free
+    if mode == "train":
+        total *= 3.0  # fwd + bwd(2x)
+    return total

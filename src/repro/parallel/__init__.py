@@ -1,0 +1,6 @@
+from repro.parallel.sharding import (batch_specs, cache_specs, param_specs,
+                                     zero1_specs, validate_divisibility)
+from repro.parallel.collectives import int8_all_reduce, hierarchical_grad_reduce
+
+__all__ = ["batch_specs", "cache_specs", "param_specs", "zero1_specs",
+           "validate_divisibility", "int8_all_reduce", "hierarchical_grad_reduce"]

@@ -1,0 +1,281 @@
+"""PartitionSpec builders for params / batches / caches (DESIGN.md §5).
+
+Layout summary (mesh axes: optional 'pod' [DP across pods], 'data' [DP/FSDP/ZeRO],
+'model' [TP]):
+
+  * attention: q/k/v projections column-sharded over 'model' (head dim), out
+    projection row-sharded; head-count divisibility handled at init by
+    padding/duplication (models/attention.py).
+  * MLP / MoE experts: hidden (ff) dim over 'model'; MoE capacity dim over 'data'
+    (dispatch all-to-all = EP traffic).
+  * Mamba: head-aligned outputs (z/x/dt, conv-x, A/dt/D/norm, out_proj) over
+    'model'; head-shared B/C projections replicated.
+  * embeddings/lm_head: vocab over 'model' when divisible, else feature dim.
+  * fsdp=True (jamba-398B): the complementary dim of every big matrix is
+    additionally sharded over 'data' (storage; GSPMD all-gathers per layer).
+  * ZeRO-1: adam moments get 'data' inserted on the first free divisible dim.
+
+Every rule validates divisibility against the actual shape and falls back to
+replication on that dim — specs always compile.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "zero1_specs",
+           "validate_divisibility"]
+
+
+def _fits(shape, dim, axes, mesh_shape) -> bool:
+    if axes is None:
+        return True
+    names = (axes,) if isinstance(axes, str) else tuple(axes)
+    size = int(np.prod([mesh_shape[a] for a in names]))
+    return shape[dim] % size == 0
+
+
+def _mk(shape, mesh_shape, *dims):
+    """Build P(...) validating divisibility; non-divisible dims replicate."""
+    out = []
+    for i, ax in enumerate(dims):
+        if ax is not None and _fits(shape, i, ax, mesh_shape) and \
+                (mesh_shape_size(ax, mesh_shape) > 1):
+            out.append(ax)
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def mesh_shape_size(ax, mesh_shape) -> int:
+    names = (ax,) if isinstance(ax, str) else tuple(ax)
+    return int(np.prod([mesh_shape.get(a, 1) for a in names]))
+
+
+def _leaf_rule(path_names, shape, mesh_shape, fsdp_ax, expert_ax=None):
+    """Spec for one param leaf (WITHOUT the stacked-repeats dim)."""
+    name = path_names[-1]
+    ctx = path_names[-2] if len(path_names) >= 2 else ""
+
+    if name == "table":  # embedding
+        # NEVER vocab-sharded: a vocab-sharded gather forces GSPMD to
+        # replicate the (B,S,d) stream (perf_log.md iteration 4).  With an
+        # FSDP axis the table is (data, model)-sharded; otherwise it is
+        # REPLICATED (d-sharded-only tables trip an XLA SPMD verifier bug
+        # when combined with batch pinning — perf_log.md iteration 6).
+        if len(shape) == 3:   # codebooks (K, V, d)
+            return _mk(shape, mesh_shape, None, fsdp_ax, "model") \
+                if fsdp_ax else P()
+        return _mk(shape, mesh_shape, fsdp_ax, "model") if fsdp_ax else P()
+    if name == "lm_head":
+        if len(shape) == 3:   # (K, d, V)
+            return _mk(shape, mesh_shape, None, fsdp_ax, "model")
+        if _fits(shape, 1, "model", mesh_shape):
+            return _mk(shape, mesh_shape, fsdp_ax, "model")
+        return _mk(shape, mesh_shape, "model", fsdp_ax)
+    if name == "patch_proj":
+        return P()
+    if name == "router":
+        return P()
+
+    if ctx == "attn":
+        if name in ("wq", "wk", "wv"):
+            return _mk(shape, mesh_shape, fsdp_ax, "model")
+        if name == "wo":
+            return _mk(shape, mesh_shape, "model", fsdp_ax)
+        if name in ("bq", "bk", "bv"):
+            return _mk(shape, mesh_shape, "model")
+
+    if ctx == "moe" and len(shape) == 3:  # experts (E, d, ff) / (E, ff, d)
+        e_ax = expert_ax if (expert_ax
+                             and shape[0] % mesh_shape.get(expert_ax, 1) == 0) \
+            else None
+        if name in ("wi", "wg"):
+            return _mk(shape, mesh_shape, e_ax, None if e_ax else fsdp_ax,
+                       "model")
+        if name == "wo":
+            return _mk(shape, mesh_shape, e_ax, "model",
+                       None if e_ax else fsdp_ax)
+
+    if ctx in ("mlp", "shared"):
+        if name in ("wi", "wg"):
+            return _mk(shape, mesh_shape, fsdp_ax, "model")
+        if name == "wo":
+            return _mk(shape, mesh_shape, "model", fsdp_ax)
+
+    # mamba leaves
+    if name in ("wz", "wx", "wdt"):
+        return _mk(shape, mesh_shape, fsdp_ax, "model")
+    if name in ("wb", "wc"):
+        return _mk(shape, mesh_shape, fsdp_ax, None)
+    if name == "conv_wx":
+        return _mk(shape, mesh_shape, None, "model")
+    if name == "conv_bx":
+        return _mk(shape, mesh_shape, "model")
+    if name in ("conv_wbc", "conv_bbc"):
+        return P()
+    if name in ("a_log", "dt_bias", "d_skip", "norm_scale"):
+        return _mk(shape, mesh_shape, "model")
+    if name == "out_proj":
+        return _mk(shape, mesh_shape, "model", fsdp_ax)
+
+    if name == "scale":  # layer norms
+        return P()
+    return P()  # safe default: replicate
+
+
+def _path_names(path) -> tuple:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(f"[{k.idx}]")
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def param_specs(cfg: ArchConfig, params_or_shapes, mesh_shape: dict) -> Any:
+    """PartitionSpec pytree mirroring the param tree.
+
+    ``params_or_shapes``: the params pytree (arrays or ShapeDtypeStructs).
+    ``mesh_shape``: e.g. {'data': 16, 'model': 16} or {'pod':2,'data':16,'model':16}.
+    Layouts (cfg.layout): 'tp' (Megatron), 'dp' (replicated params),
+    'fsdp2d' (params sharded over data AND model).
+    """
+    if cfg.layout == "dp":
+        return jax.tree.map(lambda _: P(), params_or_shapes)
+    fsdp_ax = "data" if (cfg.fsdp or cfg.layout == "fsdp2d") else None
+    expert_ax = cfg.moe.expert_axis if cfg.moe is not None else None
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        in_blocks = names and names[0] == "blocks"
+        if in_blocks:
+            spec = _leaf_rule(names, shape[1:], mesh_shape, fsdp_ax, expert_ax)
+            return P(None, *spec)  # leading stacked-repeats dim
+        return _leaf_rule(names, shape, mesh_shape, fsdp_ax, expert_ax)
+
+    return jax.tree_util.tree_map_with_path(rule, params_or_shapes)
+
+
+def _dp_axes(mesh_shape, layout: str = "tp"):
+    names = ("pod", "data", "model") if layout in ("dp", "fsdp2d") \
+        else ("pod", "data")
+    axes = tuple(a for a in names if mesh_shape.get(a, 1) > 1)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _batch_dim_spec(shape, mesh_shape, dp):
+    """Shard dim 0 over as many DP axes as divide it (drop from the right)."""
+    if dp is None:
+        return P()
+    axes = (dp,) if isinstance(dp, str) else tuple(dp)
+    while axes:
+        if shape[0] % mesh_shape_size(axes, mesh_shape) == 0 and \
+                mesh_shape_size(axes, mesh_shape) > 1:
+            return P(axes if len(axes) > 1 else axes[0])
+        axes = axes[:-1]
+    return P()
+
+
+def batch_specs(cfg: ArchConfig, batch_or_shapes, mesh_shape: dict) -> Any:
+    """Batch dim over the layout's DP axes (greedily, divisibility-checked)."""
+    dp = _dp_axes(mesh_shape, cfg.layout)
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        if not shape:
+            return P()
+        return _batch_dim_spec(shape, mesh_shape, dp)
+
+    return jax.tree_util.tree_map_with_path(rule, batch_or_shapes)
+
+
+def cache_specs(cfg: ArchConfig, cache_or_shapes, mesh_shape: dict) -> Any:
+    """Decode-cache sharding: batch over DP axes, kv-heads / ssm-heads over TP."""
+    dp = _dp_axes(mesh_shape)
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        name = names[-1]
+        if name == "pos" or not shape:
+            return P()
+        if name == "slot_pos":       # (R, W)
+            return P()
+        if name in ("k", "v", "k_q", "v_q", "k_s", "v_s"):
+            # (R, B, S, g, dh-or-1)
+            return _mk(shape, mesh_shape, None, dp, None, "model", None)
+        if name == "conv_x":         # (R, B, k-1, di)
+            return _mk(shape, mesh_shape, None, dp, None, "model")
+        if name == "conv_bc":        # (R, B, k-1, 2gn)
+            return _mk(shape, mesh_shape, None, dp, None, None)
+        if name == "ssm":            # (R, B, H, P, N)
+            return _mk(shape, mesh_shape, None, dp, "model", None, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, cache_or_shapes)
+
+
+def zero1_specs(param_spec_tree, params_or_shapes, mesh_shape: dict, *,
+                axes: tuple = ("data",)) -> Any:
+    """ZeRO-1: insert DP axes on the first free divisible dim of every param
+    spec.  ``axes=('data','model')`` for the pure-DP layout (params replicated
+    -> moments sharded over the whole mesh)."""
+    size = mesh_shape_size(axes, mesh_shape)
+
+    def rule(spec, leaf):
+        if size <= 1:
+            return spec
+        names = tuple(spec) + (None,) * (len(leaf.shape) - len(tuple(spec)))
+        used = set()
+        for n in names:
+            if n is not None:
+                used.update((n,) if isinstance(n, str) else n)
+        free = tuple(a for a in axes if a not in used)
+        if not free:
+            return spec
+        ins = free if len(free) > 1 else free[0]
+        fsize = mesh_shape_size(free, mesh_shape)
+        out = list(names)
+        for i, n in enumerate(out):
+            if n is None and leaf.shape[i] % fsize == 0 and \
+                    leaf.shape[i] >= fsize:
+                out[i] = ins
+                break
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    return jax.tree.map(rule, param_spec_tree, params_or_shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def validate_divisibility(spec_tree, shapes_tree, mesh_shape: dict) -> list:
+    """Return a list of (path, shape, spec) that would not divide evenly."""
+    bad = []
+
+    def check(path, spec, leaf):
+        names = tuple(spec)
+        for i, ax in enumerate(names):
+            if ax is None:
+                continue
+            if leaf.shape[i] % mesh_shape_size(ax, mesh_shape) != 0:
+                bad.append((_path_names(path), leaf.shape, spec))
+
+    jax.tree_util.tree_map_with_path(
+        lambda p, s, l: check(p, s, l), spec_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, P))
+    return bad

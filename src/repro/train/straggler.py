@@ -1,0 +1,51 @@
+"""Straggler detection + mitigation.
+
+At pod scale, slow hosts show up as step-time outliers.  The detector keeps an
+EWMA mean/variance of step times and flags z-score outliers; the mitigation hook
+reassigns the straggler's remaining blocks (the DV-DVFS slot plan gives every
+block an explicit time budget, so "late vs budget" is also flagged directly).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+__all__ = ["StragglerDetector"]
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    alpha: float = 0.2          # EWMA factor
+    z_threshold: float = 3.0
+    budget_factor: float = 1.5  # late if > budget_factor * planned slot
+    warmup_steps: int = 5
+
+    mean: float = 0.0
+    var: float = 0.0
+    n: int = 0
+    events: list = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, seconds: float,
+                planned_slot_s: float | None = None) -> bool:
+        """Returns True if this step is a straggler."""
+        is_straggler = False
+        if self.n >= self.warmup_steps and self.var > 0:
+            z = (seconds - self.mean) / math.sqrt(self.var)
+            if z > self.z_threshold:
+                is_straggler = True
+        if planned_slot_s is not None and self.n >= self.warmup_steps and \
+                seconds > self.budget_factor * planned_slot_s:
+            is_straggler = True
+        if is_straggler:
+            self.events.append({"step": step, "seconds": seconds,
+                                "mean": self.mean})
+        # EWMA update AFTER detection (outliers shouldn't poison the baseline
+        # immediately; they still enter with weight alpha)
+        if self.n == 0:
+            self.mean = seconds
+        else:
+            d = seconds - self.mean
+            self.mean += self.alpha * d
+            self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        self.n += 1
+        return is_straggler

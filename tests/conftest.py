@@ -1,0 +1,9 @@
+# Tests run on the single real CPU device (the 512-device XLA_FLAGS override is
+# set ONLY inside launch/dryrun.py, never globally).
+import os
+import sys
+
+# keep test determinism and avoid accidental flag leakage from the environment
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

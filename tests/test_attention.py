@@ -1,0 +1,141 @@
+"""Attention unit tests: chunked==dense, SWA masks, TP head padding exactness,
+int8 KV decode error bounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+
+B, S, D = 2, 64, 32
+
+
+def _x(rng, b=B, s=S, d=D):
+    return jnp.asarray(rng.normal(0, 1, (b, s, d)), jnp.float32)
+
+
+@pytest.mark.parametrize("swa", [None, 16])
+@pytest.mark.parametrize("nq,nkv", [(4, 4), (4, 2), (8, 1)])
+def test_chunked_matches_dense(nq, nkv, swa):
+    dims = A.AttnDims(D, nq, nkv, 8, tp=1)
+    params = A.init_attention(jax.random.PRNGKey(0), dims, jnp.float32)
+    x = _x(np.random.default_rng(0))
+    out_d, _, _ = A.attention_train(params, x, dims, swa_window=swa, impl="dense")
+    out_c, _, _ = A.attention_train(params, x, dims, swa_window=swa,
+                                    impl="chunked", chunk_q=16, chunk_k=16)
+    np.testing.assert_allclose(np.asarray(out_d), np.asarray(out_c),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("nq,nkv,tp", [
+    (4, 4, 8),    # MHA pad 4->8
+    (8, 2, 4),    # GQA dup 2->4
+    (8, 8, 8),    # no-op
+    (40, 40, 16), # the qwen1.5 case: pad 40->48
+])
+def test_tp_head_padding_exact(nq, nkv, tp):
+    """Physical (padded/duplicated) layout must produce identical outputs."""
+    d = 64
+    dims1 = A.AttnDims(d, nq, nkv, 8, tp=1)
+    dimsN = A.AttnDims(d, nq, nkv, 8, tp=tp)
+    assert dimsN.n_q_phys % tp == 0 and dimsN.n_kv_phys % tp == 0
+    p1 = A.init_attention(jax.random.PRNGKey(3), dims1, jnp.float32, qkv_bias=True)
+    pN = A.init_attention(jax.random.PRNGKey(3), dimsN, jnp.float32, qkv_bias=True)
+    x = _x(np.random.default_rng(1), d=d)
+    o1, _, _ = A.attention_train(p1, x, dims1, impl="dense")
+    oN, _, _ = A.attention_train(pN, x, dimsN, impl="dense")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(oN),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_matches_train_positions():
+    """Token-by-token decode reproduces the causal train forward."""
+    dims = A.AttnDims(D, 4, 2, 8, tp=1)
+    params = A.init_attention(jax.random.PRNGKey(1), dims, jnp.float32)
+    x = _x(np.random.default_rng(2), s=10)
+    ref, _, _ = A.attention_train(params, x, dims, impl="dense")
+    cache = A.init_attention_cache(B, 16, dims, jnp.float32)
+    outs = []
+    for t in range(10):
+        o, cache = A.attention_decode(params, x[:, t:t + 1], cache,
+                                      jnp.int32(t), dims)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(dec),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_swa_ring_buffer_decode():
+    """SWA decode with a ring cache == dense SWA attention."""
+    w = 8
+    dims = A.AttnDims(D, 4, 4, 8, tp=1)
+    params = A.init_attention(jax.random.PRNGKey(2), dims, jnp.float32)
+    x = _x(np.random.default_rng(3), s=24)
+    ref, _, _ = A.attention_train(params, x, dims, swa_window=w, impl="dense")
+    cache = A.init_attention_cache(B, 64, dims, jnp.float32, swa_window=w)
+    assert cache["k"].shape[1] == w  # ring buffer is window-sized
+    outs = []
+    for t in range(24):
+        o, cache = A.attention_decode(params, x[:, t:t + 1], cache,
+                                      jnp.int32(t), dims, swa_window=w)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(dec),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_int8_kv_decode_error_bounded():
+    dims = A.AttnDims(D, 4, 4, 8, tp=1)
+    params = A.init_attention(jax.random.PRNGKey(4), dims, jnp.float32)
+    x = _x(np.random.default_rng(4), s=16)
+    ref, _, _ = A.attention_train(params, x, dims, impl="dense")
+    cache = A.init_attention_cache(B, 16, dims, jnp.float32, kv_quant=True)
+    outs = []
+    for t in range(16):
+        o, cache = A.attention_decode(params, x[:, t:t + 1], cache,
+                                      jnp.int32(t), dims)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    err = float(jnp.max(jnp.abs(ref - dec)))
+    assert err < 5e-2, err          # int8 per-(token,head) scaling
+    assert err > 0                  # it IS quantized
+
+
+def test_prefill_cache_then_decode():
+    dims = A.AttnDims(D, 4, 2, 8, tp=1)
+    params = A.init_attention(jax.random.PRNGKey(5), dims, jnp.float32)
+    x = _x(np.random.default_rng(5), s=12)
+    ref, k, v = A.attention_train(params, x, dims, impl="dense")
+    cache = A.init_attention_cache(B, 16, dims, jnp.float32)
+    cache = A.fill_attention_cache(cache, k, v)
+    o, _ = A.attention_decode(params, x[:, -1:] * 0 + 0.5, cache,
+                              jnp.int32(12), dims)
+    assert o.shape == (B, 1, D)
+    assert np.all(np.isfinite(np.asarray(o)))
+
+
+@pytest.mark.parametrize("swa", [None, 48])
+@pytest.mark.parametrize("s,chunks", [(128, 4), (256, 8), (192, 6)])
+def test_wedge_matches_dense(s, chunks, swa):
+    """Wedge (causal-FLOP-optimal) schedule is exact vs dense."""
+    dims = A.AttnDims(D, 4, 2, 8, tp=1)
+    params = A.init_attention(jax.random.PRNGKey(9), dims, jnp.float32)
+    x = _x(np.random.default_rng(9), s=s)
+    ref, _, _ = A.attention_train(params, x, dims, impl="dense",
+                                  swa_window=swa)
+    wed, _, _ = A.attention_train(params, x, dims, impl="wedge",
+                                  swa_window=swa, chunk_q=s // chunks)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(wed),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_pallas_impl_matches_dense():
+    """Model-level 'pallas' attention path (interpret mode) == dense."""
+    dims = A.AttnDims(D, 4, 2, 8, tp=1)
+    params = A.init_attention(jax.random.PRNGKey(11), dims, jnp.float32)
+    x = _x(np.random.default_rng(11), s=128)
+    ref, _, _ = A.attention_train(params, x, dims, impl="dense")
+    pal, _, _ = A.attention_train(params, x, dims, impl="pallas",
+                                  chunk_q=64, chunk_k=64)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(pal),
+                               rtol=2e-5, atol=2e-5)

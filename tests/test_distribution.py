@@ -1,0 +1,102 @@
+"""Distribution layer: spec/tree structure match, divisibility, ZeRO-1,
+int8 collective error bounds, shard_map grad reduce on a local mesh."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_arch, smoke_config
+from repro.launch import specs as S
+from repro.models import transformer as T
+from repro.optim import AdamWConfig
+from repro.parallel import (batch_specs, cache_specs, param_specs,
+                            validate_divisibility, zero1_specs)
+from repro.parallel.collectives import int8_all_reduce
+
+MESH_SHAPE = {"data": 16, "model": 16}
+MESH_SHAPE_MP = {"pod": 2, "data": 16, "model": 16}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_match_structure_and_divide(arch):
+    cfg = get_arch(arch, tp=16)
+    p_sds = S.params_shapes(cfg)
+    spec = param_specs(cfg, p_sds, MESH_SHAPE)
+    assert jax.tree_util.tree_structure(spec, is_leaf=lambda x: isinstance(x, P)) \
+        .num_leaves == jax.tree_util.tree_structure(p_sds).num_leaves
+    bad = validate_divisibility(spec, p_sds, MESH_SHAPE)
+    assert not bad, bad
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "mixtral-8x7b", "jamba-1.5-large-398b"])
+def test_zero1_adds_data_axis(arch):
+    cfg = get_arch(arch, tp=16)
+    p_sds = S.params_shapes(cfg)
+    spec = param_specs(cfg, p_sds, MESH_SHAPE)
+    zspec = zero1_specs(spec, p_sds, MESH_SHAPE)
+    bad = validate_divisibility(zspec, p_sds, MESH_SHAPE)
+    assert not bad, bad
+    # at least the big matrices must now mention 'data'
+    n_data = sum(1 for s in jax.tree.leaves(
+        zspec, is_leaf=lambda x: isinstance(x, P))
+        if any(ax is not None and "data" in ((ax,) if isinstance(ax, str)
+                                             else ax) for ax in tuple(s)))
+    assert n_data > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cache_specs_match_structure(arch):
+    from repro.configs.shapes import SHAPES
+    cfg = get_arch(arch, tp=16)
+    c_sds = S.cache_shapes(cfg, SHAPES["decode_32k"])
+    spec = cache_specs(cfg, c_sds, MESH_SHAPE)
+    bad = validate_divisibility(spec, c_sds, MESH_SHAPE)
+    assert not bad, bad
+
+
+def test_param_count_big_configs_fit_hbm():
+    """bf16 params sharded per the specs must fit 16 GB/chip on the single pod."""
+    for arch in ARCH_IDS:
+        cfg = get_arch(arch, tp=16)
+        p_sds = S.params_shapes(cfg)
+        spec = param_specs(cfg, p_sds, MESH_SHAPE)
+
+        def shard_bytes(leaf, s):
+            n = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+            for ax in tuple(s):
+                if ax is None:
+                    continue
+                names = (ax,) if isinstance(ax, str) else ax
+                for a in names:
+                    n //= MESH_SHAPE[a]
+            return n
+
+        per_dev = sum(shard_bytes(l, s) for l, s in zip(
+            jax.tree.leaves(p_sds),
+            jax.tree.leaves(spec, is_leaf=lambda x: isinstance(x, P))))
+        assert per_dev < 8e9, (arch, per_dev)  # leave room for opt + act
+
+
+def test_int8_all_reduce_error_bound():
+    mesh = jax.make_mesh((1,), ("pod",))
+    from jax.experimental.shard_map import shard_map
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 3.0, (1000,)),
+                    jnp.float32)
+
+    f = shard_map(lambda t: int8_all_reduce(t, "pod"), mesh=mesh,
+                  in_specs=P(), out_specs=P())
+    out = f(x)
+    err = np.abs(np.asarray(out) - np.asarray(x))
+    scale = np.abs(np.asarray(x)).max()
+    assert err.max() <= scale / 127.0 + 1e-6  # one quantization step
+
+
+def test_batch_specs_divisibility_fallback():
+    cfg = get_arch("olmo-1b", tp=16)
+    b = {"tokens": jax.ShapeDtypeStruct((1, 128), jnp.int32)}  # B=1 < 16
+    spec = batch_specs(cfg, b, MESH_SHAPE)
+    assert tuple(spec["tokens"]) == ()  # replicated, not crashed
+    b2 = {"tokens": jax.ShapeDtypeStruct((256, 128), jnp.int32)}
+    spec2 = batch_specs(cfg, b2, MESH_SHAPE_MP)
+    assert tuple(spec2["tokens"])[0] == ("pod", "data")

@@ -1,0 +1,56 @@
+"""Loop-aware HLO collective accounting: hand-checkable programs."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.hloparse import _buffer_bytes, parse_collectives
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 1, reason="needs a device")
+
+
+def _mesh1():
+    return jax.make_mesh((1,), ("data",))
+
+
+def test_buffer_bytes():
+    assert _buffer_bytes("f32[4,8]{1,0}") == 128
+    assert _buffer_bytes("(bf16[2,2]{1,0}, s8[4]{0})") == 12
+    assert _buffer_bytes("pred[]") == 1  # scalar: one element
+
+
+def test_psum_outside_loop_counted_once():
+    mesh = _mesh1()
+    from jax.experimental.shard_map import shard_map
+
+    def fn(x):
+        return jax.lax.psum(x, "data")
+
+    f = shard_map(fn, mesh=mesh, in_specs=P(), out_specs=P())
+    with mesh:
+        comp = jax.jit(f).lower(jnp.ones((128,), jnp.float32)).compile()
+    res = parse_collectives(comp.as_text())
+    assert res["looped"]["all-reduce"] == res["raw"]["all-reduce"]
+    assert res["looped"]["all-reduce"] >= 128 * 4
+
+
+def test_psum_inside_scan_multiplied_by_trips():
+    mesh = _mesh1()
+    from jax.experimental.shard_map import shard_map
+
+    trips = 7
+
+    def inner(x):
+        def body(c, _):
+            return jax.lax.psum(c, "data") * 0.5, None
+        out, _ = jax.lax.scan(body, x, None, length=trips)
+        return out
+
+    f = shard_map(inner, mesh=mesh, in_specs=P(), out_specs=P())
+    with mesh:
+        comp = jax.jit(f).lower(jnp.ones((64,), jnp.float32)).compile()
+    res = parse_collectives(comp.as_text())
+    assert res["raw"]["all-reduce"] > 0
+    assert res["looped"]["all-reduce"] == trips * res["raw"]["all-reduce"]

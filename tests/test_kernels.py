@@ -1,0 +1,90 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(rng, shape, dtype):
+    x = rng.normal(0, 1, shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("s,d,bq,bk", [(128, 64, 64, 64), (256, 32, 128, 64)])
+def test_flash_attention_sweep(dtype, hq, hkv, s, d, bq, bk):
+    rng = np.random.default_rng(hash((hq, hkv, s, d)) % 2**31)
+    q = _rand(rng, (2, hq, s, d), dtype)
+    k = _rand(rng, (2, hkv, s, d), dtype)
+    v = _rand(rng, (2, hkv, s, d), dtype)
+    out = ops.flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("swa", [32, 128])
+def test_flash_attention_swa(swa):
+    rng = np.random.default_rng(1)
+    q = _rand(rng, (1, 2, 256, 32), jnp.float32)
+    k = _rand(rng, (1, 2, 256, 32), jnp.float32)
+    v = _rand(rng, (1, 2, 256, 32), jnp.float32)
+    out = ops.flash_attention(q, k, v, swa_window=swa, block_q=64, block_k=64,
+                              interpret=True)
+    want = ref.flash_attention_ref(q, k, v, swa_window=swa)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    rng = np.random.default_rng(2)
+    q = _rand(rng, (1, 2, 128, 32), jnp.float32)
+    k = _rand(rng, (1, 2, 128, 32), jnp.float32)
+    v = _rand(rng, (1, 2, 128, 32), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                              interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,p,n,chunk", [(128, 16, 32, 32), (256, 32, 16, 64),
+                                         (64, 8, 8, 64)])
+def test_ssd_scan_sweep(dtype, s, p, n, chunk):
+    rng = np.random.default_rng(hash((s, p, n)) % 2**31)
+    bh = 3
+    x = _rand(rng, (bh, s, p), dtype)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, (bh, s)), jnp.float32)
+    a_log = jnp.asarray(rng.uniform(-1, 1, (bh,)), jnp.float32)
+    bm = _rand(rng, (bh, s, n), dtype)
+    cm = _rand(rng, (bh, s, n), dtype)
+    y = ops.ssd_scan(x, dt, a_log, bm, cm, chunk=chunk, interpret=True)
+    want = ref.ssd_scan_ref(x, dt, a_log, bm, cm)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+@pytest.mark.parametrize("rows,length,br", [(128, 64, 32), (256, 32, 128),
+                                            (64, 96, 64)])
+def test_block_stats_sweep(rows, length, br):
+    rng = np.random.default_rng(hash((rows, length)) % 2**31)
+    toks = rng.integers(0, 50, (rows, length)).astype(np.int32)
+    # plant some patterns
+    for r in range(0, rows, 7):
+        toks[r, : 3] = (17, 23, 5)
+    got = ops.block_stats(jnp.asarray(toks), (17, 23, 5), block_rows=br,
+                          interpret=True)
+    want = ref.block_stats_ref(jnp.asarray(toks), (17, 23, 5))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+    assert np.asarray(got)[1] >= rows // 7  # planted matches found

@@ -1,0 +1,67 @@
+"""Sampling estimator: CI coverage, overhead contract, cost-model calibration."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (CostModel, RooflineTimeModel, required_sample_size,
+                        sample_block_cost)
+
+
+def test_estimate_close_to_truth():
+    rng = np.random.default_rng(0)
+    costs = rng.lognormal(0.0, 0.5, 20000)
+    est = sample_block_cost(costs, fraction=0.05, seed=1)
+    assert abs(est.total - costs.sum()) / costs.sum() < 0.05
+    assert est.ci_low <= est.total <= est.ci_high
+    assert est.n_sampled <= max(16, int(np.ceil(0.05 * len(costs))))
+
+
+def test_ci_coverage_over_many_blocks():
+    """~95% of bootstrap CIs should contain the truth (allow slack: >=80%)."""
+    rng = np.random.default_rng(42)
+    hits = 0
+    trials = 60
+    for t in range(trials):
+        costs = rng.lognormal(0.0, 0.6, 4000)
+        est = sample_block_cost(costs, fraction=0.08, seed=t, n_boot=200)
+        hits += est.ci_low <= costs.sum() <= est.ci_high
+    assert hits / trials >= 0.8
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 10_000))
+def test_sampling_never_exceeds_block(n):
+    costs = np.ones(n)
+    est = sample_block_cost(costs, fraction=0.05)
+    assert est.n_sampled <= n
+    assert est.n_records == n
+    assert est.total == pytest.approx(n)
+
+
+def test_required_sample_size_matches_paper_contract():
+    """CoV=1, 5% error, 95% conf -> n ≈ (1.96/0.05)^2 ≈ 1537 records; for a
+    100k-record block that is ~1.5% — same order as the paper's <1% overhead."""
+    n = required_sample_size(cov=1.0, rel_err=0.05, confidence=0.95)
+    assert 1400 < n < 1700
+
+
+def test_cost_model_recovers_linear_costs():
+    rng = np.random.default_rng(3)
+    feats = [{"tokens": float(t), "const": 1.0}
+             for t in rng.integers(1000, 100000, 50)]
+    secs = [2e-6 * f["tokens"] + 0.3 for f in feats]
+    m = CostModel(("tokens", "const")).fit(feats, secs)
+    pred = m.predict({"tokens": 50000.0, "const": 1.0})
+    assert pred == pytest.approx(2e-6 * 50000 + 0.3, rel=1e-6)
+
+
+def test_roofline_time_model_terms():
+    rt = RooflineTimeModel.from_counts(flops=197e12, hbm_bytes=819e9,
+                                       coll_bytes=0, chips=1)
+    # exactly 1 second of compute and 1 second of memory
+    assert rt.terms.t_comp == pytest.approx(1.0)
+    assert rt.terms.t_mem == pytest.approx(1.0)
+    assert rt.time_at(1.0) == pytest.approx(1.0)
+    assert rt.time_at(0.5) == pytest.approx(2.0)   # compute-bound below f*
+    assert rt.zero_cost_freq() == pytest.approx(1.0)
