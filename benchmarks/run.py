@@ -7,6 +7,9 @@ Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).  Sections:
   fig11-12 — Zipf sensitivity z ∈ {0,1,2}
   fig13    — tight vs firm deadline
   planners — paper vs global vs roofline planner on the same workload
+  cluster  — multi-node planner vs per-node independent Algorithm 1 on
+             heterogeneous nodes, plus online re-planning under a mid-run
+             slowdown (datasets × apps × node counts × deadline tightness)
   roofline — summary of results/roofline_sp.json (built from the dry-run)
   train    — tiny end-to-end LM training with the DV-DVFS controller
   serve    — batched decode with roofline-planned windows
@@ -87,6 +90,80 @@ def bench_planners():
         rows.append(r)
         _row(f"planner_{planner}_wordcount", r["dvo_time_s"] * 1e6 / 12,
              f"energy=-{r['energy_improvement']:.1%};met={r['deadline_met']}")
+    return rows
+
+
+def bench_cluster():
+    """Cluster scenario sweep: datasets (Zipf z) × apps × node counts ×
+    deadline tightness.  Every row compares the multi-node planner (LPT +
+    cross-node greedy) against per-node independent Algorithm 1 on a
+    round-robin split — same blocks, same heterogeneous nodes, same deadline.
+    A final row injects a mid-run 2× slowdown and shows online re-planning
+    recovering the deadline that the static plan misses."""
+    import numpy as np
+
+    from repro.cluster import (NodeSpec, SlowdownEvent, assign_blocks,
+                               plan_cluster, plan_independent,
+                               simulate_cluster)
+    from repro.core import BlockInfo, FrequencyLadder, zipf_block_sizes
+
+    SPEEDS = (1.0, 0.7, 1.3, 0.85, 1.2)
+    APPS = {"wordcount": (5.0, 24), "grep": (3.0, 32), "avg": (8.0, 18)}
+    rows = []
+    for app, (mean_cost, n_blocks) in APPS.items():
+        for z in (1.0, 2.0):
+            sizes = zipf_block_sizes(n_blocks, 10000, z=z, seed=0)
+            costs = sizes / sizes.mean() * mean_cost
+            blocks = [BlockInfo(i, float(c)) for i, c in enumerate(costs)]
+            for n_nodes in (3, 5):
+                nodes = [NodeSpec(f"n{k}", speed=SPEEDS[k % len(SPEEDS)])
+                         for k in range(n_nodes)]
+                rr = assign_blocks(blocks, nodes, strategy="round_robin")
+                mk_rr = max(sum(b.est_time_fmax for b in g) / n.speed
+                            for g, n in zip(rr, nodes))
+                for tag, slack in (("tight", 1.15), ("firm", 1.5)):
+                    deadline = mk_rr * slack
+                    r_ind = simulate_cluster(
+                        plan_independent(blocks, nodes, deadline), blocks)
+                    r_clu = simulate_cluster(
+                        plan_cluster(blocks, nodes, deadline), blocks)
+                    imp = r_clu.improvement_vs(r_ind)
+                    rows.append({"app": app, "z": z, "nodes": n_nodes,
+                                 "deadline": tag, "improvement": imp,
+                                 "ind_energy_j": r_ind.total_energy_j,
+                                 "clu_energy_j": r_clu.total_energy_j,
+                                 "ind_met": r_ind.deadline_met,
+                                 "clu_met": r_clu.deadline_met})
+                    _row(f"cluster_{app}_z{z:g}_n{n_nodes}_{tag}",
+                         r_clu.makespan_s * 1e6 / n_blocks,
+                         f"energy=-{imp:.1%};ind_met={r_ind.deadline_met};"
+                         f"clu_met={r_clu.deadline_met}")
+
+    # online recovery: uniform blocks, deep ladder, 2x slowdown on one node
+    deep = FrequencyLadder(
+        states=tuple(round(f, 2) for f in np.arange(0.35, 1.001, 0.05)))
+    blocks = [BlockInfo(i, 5.0) for i in range(24)]
+    nodes = [NodeSpec("n0", speed=1.0, ladder=deep),
+             NodeSpec("n1", speed=0.8, ladder=deep),
+             NodeSpec("n2", speed=1.25, ladder=deep)]
+    mk = max(sum(b.est_time_fmax for b in g) / n.speed
+             for g, n in zip(assign_blocks(blocks, nodes), nodes))
+    deadline = mk * 2.2
+    # balanced spread (not the auto assignment search): the scenario shows
+    # the feedback loop recovering a deadline, so every node must hold work
+    plan = plan_cluster(blocks, nodes, deadline, assignment="lpt")
+    n0_blocks = len(plan.node_plans[0].blocks)
+    events = [SlowdownEvent("n0", after_block=n0_blocks // 2 - 1, factor=2.0)]
+    r_static = simulate_cluster(plan, blocks, events=events)
+    r_online = simulate_cluster(plan, blocks, events=events, online=True,
+                                ewma_alpha=0.7, replan_threshold=0.1)
+    rows.append({"scenario": "online_recovery",
+                 "static_met": r_static.deadline_met,
+                 "online_met": r_online.deadline_met,
+                 "replans": r_online.n_replans})
+    _row("cluster_online_recovery", r_online.makespan_s * 1e6 / 24,
+         f"static_met={r_static.deadline_met};"
+         f"online_met={r_online.deadline_met};replans={r_online.n_replans}")
     return rows
 
 
@@ -178,6 +255,7 @@ def main() -> None:
         results["fig11_12"] = bench_fig11_12()
         results["fig13"] = bench_fig13()
         results["planners"] = bench_planners()
+    results["cluster"] = bench_cluster()
     results["roofline"] = bench_roofline()
     results["train"] = bench_train()
     results["serve"] = bench_serve()

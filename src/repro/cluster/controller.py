@@ -1,0 +1,123 @@
+"""Online feedback re-planning: the paper's offline Algorithm 1, streamed.
+
+The offline plan fixes every frequency before the run.  On a real cluster the
+estimates drift (interference, thermal throttling, mis-sampled blocks), so the
+controller closes the loop *between blocks*:
+
+  observe      each finished block reports its wall time; the controller
+               compares it with the *base* (undrifted) prediction at the
+               frequency actually run and feeds the ratio into the same EWMA
+               machinery as ``repro.train.straggler.StragglerDetector`` — the
+               EWMA mean of observed/predicted IS the node's drift estimate,
+               and the z-score/budget logic flags straggler blocks for free.
+
+  re-plan      when a node's drift has moved more than ``replan_threshold``
+               (relative) since its last plan, the remaining blocks are
+               re-estimated (base estimate × drift), the remaining deadline
+               budget is recomputed (deadline − elapsed), and the single-node
+               greedy down-clock re-runs on just that node's tail: late nodes
+               clock up, early nodes harvest the extra slack.
+
+  hysteresis   re-planning is *relative to the drift at the previous re-plan*,
+               not to 1.0 — a node that drifted once and then runs true to its
+               corrected estimate never re-plans again, so frequencies cannot
+               oscillate between two ladder states on estimation noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.scheduler import BlockInfo, plan_dvfs
+from repro.cluster.planner import ClusterPlan
+from repro.train.straggler import StragglerDetector
+
+__all__ = ["OnlineReplanner"]
+
+
+@dataclasses.dataclass
+class _NodeState:
+    spec: object                 # NodeSpec
+    queue: list                  # remaining BlockPlan, head = next to run
+    detector: StragglerDetector  # EWMA over observed/predicted ratios
+    drift: float = 1.0
+    drift_at_replan: float = 1.0
+    elapsed_s: float = 0.0
+    done: int = 0
+    replans: int = 0
+
+
+class OnlineReplanner:
+    """Per-node drift tracking + tail re-planning over a ``ClusterPlan``.
+
+    ``est_blocks`` are the planner's base estimates (the BlockInfo the plan was
+    built from); drift is always measured against these, never against an
+    already-drift-scaled prediction, so the EWMA converges to the true
+    slowdown factor instead of chasing its own corrections.
+    """
+
+    def __init__(self, plan: ClusterPlan, est_blocks: Sequence[BlockInfo], *,
+                 replan_threshold: float = 0.15, ewma_alpha: float = 0.3,
+                 error_margin: float = 0.05):
+        self._base = {b.index: b for b in est_blocks}
+        self.deadline_s = plan.deadline_s
+        self.replan_threshold = replan_threshold
+        self.error_margin = error_margin
+        self.replan_log: list = []
+        self._nodes: dict = {}
+        for np_ in plan.node_plans:
+            det = StragglerDetector(alpha=ewma_alpha, warmup_steps=2)
+            self._nodes[np_.node.name] = _NodeState(
+                spec=np_.node, queue=list(np_.blocks), detector=det)
+
+    # --- execution interface -------------------------------------------------
+    def next_block(self, node_name: str):
+        """The BlockPlan this node should run next (None when drained)."""
+        q = self._nodes[node_name].queue
+        return q[0] if q else None
+
+    def observe(self, node_name: str, observed_s: float) -> bool:
+        """Record the head block's wall time; returns True if we re-planned."""
+        st = self._nodes[node_name]
+        bp = st.queue.pop(0)
+        st.elapsed_s += observed_s
+        st.done += 1
+        base_pred = st.spec.block_time(self._base[bp.index], bp.rel_freq)
+        ratio = observed_s / max(base_pred, 1e-12)
+        # ratio stream through the straggler EWMA: mean == drift estimate,
+        # planned_slot_s=1.0 makes "late vs budget" mean "ratio >> 1"
+        st.detector.observe(st.done, ratio, planned_slot_s=1.0)
+        st.drift = max(st.detector.mean, 1e-6)
+        rel_change = abs(st.drift / st.drift_at_replan - 1.0)
+        if st.queue and rel_change > self.replan_threshold:
+            self._replan_node(node_name, st)
+            return True
+        return False
+
+    @property
+    def total_replans(self) -> int:
+        return sum(st.replans for st in self._nodes.values())
+
+    def straggler_events(self, node_name: str) -> list:
+        return self._nodes[node_name].detector.events
+
+    # --- internal ------------------------------------------------------------
+    def _replan_node(self, name: str, st: _NodeState) -> None:
+        budget = self.deadline_s - st.elapsed_s
+        # node-local re-estimate: base time, drift-corrected, at node speed
+        local = [dataclasses.replace(
+                    self._base[bp.index],
+                    est_time_fmax=(self._base[bp.index].est_time_fmax
+                                   * st.drift / st.spec.speed))
+                 for bp in st.queue]
+        plan = plan_dvfs(local, max(budget, 1e-9), planner="global",
+                         ladder=st.spec.ladder, power=st.spec.power,
+                         error_margin=self.error_margin)
+        st.queue = list(plan.blocks)
+        st.drift_at_replan = st.drift
+        st.replans += 1
+        self.replan_log.append({
+            "node": name, "after_block": st.done, "drift": st.drift,
+            "budget_s": budget,
+            "freqs": tuple(bp.rel_freq for bp in st.queue),
+        })

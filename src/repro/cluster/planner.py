@@ -1,0 +1,246 @@
+"""Multi-node DV-DVFS planner.
+
+Extends the single-node greedy down-clock loop (``repro.core.scheduler``,
+planner ``global``) across a heterogeneous cluster:
+
+1. **Assignment** — sampled blocks are placed on nodes.  ``lpt`` (longest
+   processing time first onto the earliest-finishing node, speed-aware) is the
+   variety-aware default: it balances *estimated work*, which is exactly the
+   per-block signal Algorithm 1's sampling pass produces.  ``round_robin``
+   ignores both variety and node speed — it is the Data-Variety/heterogeneity-
+   oblivious splitter real Big-Data stacks default to, kept as the baseline.
+   An explicit per-block node index list pins blocks to nodes (used by the
+   serving engine, where decode streams cannot migrate).
+
+2. **Cross-node greedy down-clock** — every (node, block) pair starts at that
+   node's f_max; one shared max-heap repeatedly takes the single down-step
+   anywhere in the cluster with the best energy-saved / time-added ratio,
+   subject to each node finishing within ``deadline * (1 - error_margin)``.
+   Nodes run in parallel, so the constraint is per-node finish time, not the
+   sum — but the *choice* of which step to take is global, so a node with a
+   coarser ladder or a steeper power curve competes for the same slack pool on
+   equal ΔE/Δt terms.
+
+The variety-oblivious baseline (``plan_independent``) runs the paper's
+Algorithm 1 per node on a round-robin split: each node gets an equal *count*
+of blocks regardless of estimated cost or node speed, then plans its own
+frequencies under the shared deadline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.scheduler import (BlockInfo, BlockPlan, _run_downclock_heap,
+                                  plan_dvfs)
+from repro.cluster.node import NodeSpec
+
+__all__ = ["NodePlan", "ClusterPlan", "assign_blocks", "plan_cluster",
+           "plan_independent"]
+
+
+@dataclasses.dataclass(frozen=True)
+class NodePlan:
+    """One node's share of a cluster plan (times are node-local seconds)."""
+
+    node: NodeSpec
+    blocks: tuple
+
+    @property
+    def pred_finish_s(self) -> float:
+        return sum(b.pred_time_s for b in self.blocks)
+
+    @property
+    def pred_energy_j(self) -> float:
+        return sum(b.pred_energy_j for b in self.blocks)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterPlan:
+    planner: str
+    deadline_s: float
+    node_plans: tuple
+    feasible: bool
+
+    @property
+    def pred_makespan_s(self) -> float:
+        return max((np.pred_finish_s for np in self.node_plans), default=0.0)
+
+    @property
+    def pred_total_energy(self) -> float:
+        return sum(np.pred_energy_j for np in self.node_plans)
+
+    def assignment(self) -> dict:
+        """block index -> node name."""
+        out = {}
+        for np_ in self.node_plans:
+            for bp in np_.blocks:
+                out[bp.index] = np_.node.name
+        return out
+
+
+def assign_blocks(
+    blocks: Sequence[BlockInfo],
+    nodes: Sequence[NodeSpec],
+    *,
+    strategy="lpt",
+    deadline_s: float | None = None,
+) -> list:
+    """Split ``blocks`` across ``nodes``; returns a list of block-lists.
+
+    ``strategy`` is ``"lpt"``, ``"pack"``, ``"round_robin"``, or an explicit
+    sequence of node indices (one per block).  All are deterministic: sorts
+    use (estimated time desc, block index asc) and ties go to the lower node
+    index, so a fixed input always yields the same assignment.
+
+    ``pack`` (needs ``deadline_s``) consolidates work onto the fastest nodes
+    up to their deadline capacity at f_max: busy energy scales with busy
+    TIME, so a fast node at f_max can beat a slow node at the energy-optimal
+    clock — the makespan-minimizing spread of LPT is not always the
+    energy-minimizing one.  Blocks that fit nowhere fall back to the LPT
+    rule (earliest finish including the block).
+    """
+    groups = [[] for _ in nodes]
+    if isinstance(strategy, str):
+        if strategy == "round_robin":
+            for i, b in enumerate(blocks):
+                groups[i % len(nodes)].append(b)
+        elif strategy == "pack":
+            if deadline_s is None:
+                raise ValueError("pack assignment needs deadline_s")
+            order = sorted(blocks, key=lambda b: (-b.est_time_fmax, b.index))
+            by_speed = sorted(range(len(nodes)),
+                              key=lambda k: (-nodes[k].speed, k))
+            loads = [0.0] * len(nodes)
+            for b in order:
+                placed = False
+                for k in by_speed:
+                    t = b.est_time_fmax / nodes[k].speed
+                    if loads[k] + t <= deadline_s + 1e-9:
+                        groups[k].append(b)
+                        loads[k] += t
+                        placed = True
+                        break
+                if not placed:  # overloaded everywhere: earliest finish
+                    k = min(range(len(nodes)), key=lambda j: (
+                        loads[j] + b.est_time_fmax / nodes[j].speed, j))
+                    groups[k].append(b)
+                    loads[k] += b.est_time_fmax / nodes[k].speed
+        elif strategy == "lpt":
+            # uniform-machine LPT: place each block (largest first) on the
+            # node whose finish time INCLUDING the block is earliest — on
+            # heterogeneous speeds the earliest-available node is not the
+            # earliest-finishing one (a giant block belongs on a fast node
+            # even if that node already has work)
+            order = sorted(blocks, key=lambda b: (-b.est_time_fmax, b.index))
+            loads = [0.0] * len(nodes)
+            for b in order:
+                k = min(range(len(nodes)),
+                        key=lambda j: (loads[j] + b.est_time_fmax / nodes[j].speed, j))
+                groups[k].append(b)
+                loads[k] += b.est_time_fmax / nodes[k].speed
+        else:
+            raise ValueError(f"unknown assignment strategy: {strategy}")
+    else:
+        idxs = list(strategy)
+        if len(idxs) != len(blocks):
+            raise ValueError("explicit assignment must name a node per block")
+        for b, k in zip(blocks, idxs):
+            groups[int(k)].append(b)
+    return groups
+
+
+def plan_cluster(
+    blocks: Sequence[BlockInfo],
+    nodes: Sequence[NodeSpec],
+    deadline_s: float,
+    *,
+    assignment="auto",
+    error_margin: float = 0.05,
+) -> ClusterPlan:
+    """Assign blocks to nodes and greedily down-clock across the cluster.
+
+    ``assignment="auto"`` plans every candidate strategy (``lpt``, ``pack``,
+    ``round_robin``) and keeps the feasible plan with the lowest predicted
+    energy (falling back to the smallest makespan when none is feasible) —
+    deterministic, and by construction never worse than planning on the
+    baseline's own round-robin split.
+    """
+    if not nodes:
+        raise ValueError("need at least one node")
+    if isinstance(assignment, str) and assignment == "auto":
+        candidates = [plan_cluster(blocks, nodes, deadline_s, assignment=s,
+                                   error_margin=error_margin)
+                      for s in ("lpt", "pack", "round_robin")]
+        feasible = [p for p in candidates if p.feasible]
+        if feasible:
+            return min(feasible, key=lambda p: p.pred_total_energy)
+        return min(candidates, key=lambda p: p.pred_makespan_s)
+    budget = deadline_s * (1.0 - error_margin)
+    groups = assign_blocks(blocks, nodes, strategy=assignment,
+                           deadline_s=budget)
+
+    # one flat item per (node, block); the shared greedy core runs one heap
+    # across the whole cluster, with per-NODE budgets gating each step
+    items = [(k, j) for k in range(len(nodes))
+             for j in range(len(groups[k]))]
+    pos = [len(nodes[k].ladder.states) - 1 for k, _ in items]
+    times = [nodes[k].block_time(groups[k][j], 1.0) for k, j in items]
+    energies = [nodes[k].block_energy(groups[k][j], t, 1.0)
+                for (k, j), t in zip(items, times)]
+    node_t = [sum(nodes[k].block_time(b, 1.0) for b in grp)
+              for k, grp in enumerate(groups)]
+
+    def on_step(i: int, dt: float) -> None:
+        node_t[items[i][0]] += dt
+
+    _run_downclock_heap(
+        len(items),
+        lambda i: nodes[items[i][0]].ladder.states,
+        lambda i, f: nodes[items[i][0]].block_time(
+            groups[items[i][0]][items[i][1]], f),
+        lambda i, t, f: nodes[items[i][0]].block_energy(
+            groups[items[i][0]][items[i][1]], t, f),
+        pos, times, energies,
+        step_ok=lambda i, dt: node_t[items[i][0]] + dt <= budget + 1e-9,
+        on_step=on_step,
+    )
+
+    node_plans = []
+    for k, (n, grp) in enumerate(zip(nodes, groups)):
+        slot = deadline_s / max(len(grp), 1)
+        offset = items.index((k, 0)) if grp else 0
+        bps = tuple(BlockPlan(b.index, slot,
+                              n.ladder.states[pos[offset + j]],
+                              times[offset + j], energies[offset + j])
+                    for j, b in enumerate(grp))
+        node_plans.append(NodePlan(n, bps))
+    feasible = all(t <= deadline_s + 1e-9 for t in node_t)
+    return ClusterPlan("cluster", deadline_s, tuple(node_plans), feasible)
+
+
+def plan_independent(
+    blocks: Sequence[BlockInfo],
+    nodes: Sequence[NodeSpec],
+    deadline_s: float,
+    *,
+    assignment="round_robin",
+    error_margin: float = 0.05,
+) -> ClusterPlan:
+    """Baseline: per-node independent Algorithm 1 on an oblivious split.
+
+    Each node receives its round-robin share, rescales the estimates to its
+    own speed, and runs the paper planner in isolation — no cross-node slack
+    trading, equal-count (not equal-work) placement.
+    """
+    groups = assign_blocks(blocks, nodes, strategy=assignment)
+    node_plans = []
+    feasible = True
+    for n, grp in zip(nodes, groups):
+        local = [dataclasses.replace(b, est_time_fmax=b.est_time_fmax / n.speed)
+                 for b in grp]
+        plan = plan_dvfs(local, deadline_s, planner="paper", ladder=n.ladder,
+                         power=n.power, error_margin=error_margin)
+        node_plans.append(NodePlan(n, plan.blocks))
+        feasible = feasible and plan.feasible
+    return ClusterPlan("independent", deadline_s, tuple(node_plans), feasible)

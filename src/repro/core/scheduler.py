@@ -103,21 +103,84 @@ def block_time(block: BlockInfo, rel_freq: float) -> float:
     return block.est_time_fmax / max(rel_freq, 1e-6)
 
 
-def _required_freq(block: BlockInfo, budget_s: float,
-                   ladder: FrequencyLadder) -> float:
-    """Lowest ladder state finishing the block within ``budget_s`` (f_max if none)."""
+def _required_freq(block: BlockInfo, budget_s: float, ladder: FrequencyLadder,
+                   power: PowerModel) -> float:
+    """Cheapest ladder state finishing the block within ``budget_s``.
+
+    Algorithm 1 says "lowest feasible frequency", under the paper's premise
+    that lower clocks always cost less energy — true for its CPU model, but
+    the TPU busy energy t·P(f) is U-shaped in f (the idle floor stretches
+    with time), so blindly taking the lowest state can cost MORE than f_max.
+    Picking the minimum-energy feasible state is identical to the paper's
+    rule whenever energy decreases monotonically with falling f, and clamps
+    at the energy-optimal state otherwise.  f_max if nothing fits.
+    """
     if budget_s <= 0:
         return ladder.f_max
+    best_f, best_e = None, float("inf")
     for f in ladder.states:
-        if block_time(block, f) <= budget_s + 1e-12:
-            return f
-    return ladder.f_max
+        t = block_time(block, f)
+        if t > budget_s + 1e-12:
+            continue
+        e = _block_energy(power, block, t, f)
+        if e < best_e - 1e-15:
+            best_f, best_e = f, e
+    return best_f if best_f is not None else ladder.f_max
 
 
 def _block_energy(power: PowerModel, block: BlockInfo, t: float,
                   f: float) -> float:
     """Paper EC term (formula 7): busy-only processing energy."""
     return power.busy_energy(t, f, util=block.util)
+
+
+def _run_downclock_heap(n: int, states_of, time_of, energy_of,
+                        pos: list, times: list, energies: list,
+                        step_ok, on_step=None) -> None:
+    """Shared ΔE/Δt greedy core (used single-node and cluster-wide).
+
+    Repeatedly takes the single down-clock step with the best energy-saved /
+    time-added ratio while its governing budget accepts it, via a lazily
+    validated max-heap.  Mutates ``pos``/``times``/``energies`` in place.
+
+      states_of(i)      item i's ladder states (ascending, ends at f_max)
+      time_of(i, f)     item i's processing time at frequency f
+      energy_of(i,t,f)  item i's busy energy for t seconds at f
+      step_ok(i, dt)    True if adding dt to item i's budget still fits
+      on_step(i, dt)    budget bookkeeping after a step is taken
+    """
+    def step_gain(i):
+        p = pos[i]
+        if p == 0:
+            return None
+        f_lo = states_of(i)[p - 1]
+        t_lo = time_of(i, f_lo)
+        dt = t_lo - times[i]
+        e_lo = energy_of(i, t_lo, f_lo)
+        de = energies[i] - e_lo
+        if de <= 1e-15:
+            return None
+        return (-de / max(dt, 1e-12), i, p - 1, t_lo, e_lo, dt)
+
+    heap = []
+    for i in range(n):
+        g = step_gain(i)
+        if g is not None:
+            heapq.heappush(heap, g)
+    while heap:
+        _, i, target, t_lo, e_lo, dt = heapq.heappop(heap)
+        if target != pos[i] - 1:
+            continue  # stale entry
+        if not step_ok(i, dt):
+            continue  # this budget is out of slack; other items may still fit
+        pos[i] = target
+        times[i] = t_lo
+        energies[i] = e_lo
+        if on_step is not None:
+            on_step(i, dt)
+        g = step_gain(i)
+        if g is not None:
+            heapq.heappush(heap, g)
 
 
 def plan_dvfs(
@@ -156,7 +219,7 @@ def plan_dvfs(
         freqs = []
         for b in blocks:
             budget = slot * (1.0 - margin_for(b))
-            freqs.append(_required_freq(b, budget, ladder))
+            freqs.append(_required_freq(b, budget, ladder, power))
         # Algorithm 1 line 5 (while TPT < D): repair pass — if the per-slot plan
         # still overruns the total deadline, undo the down-clocks that cost the most
         # time per joule saved until TPT fits.
@@ -194,54 +257,25 @@ def plan_dvfs(
     # --- global greedy ("global" / "roofline") ------------------------------
     # state: per-block ladder position (start at f_max); lower the block whose next
     # down-step has the best ΔE/Δt while total time fits deadline*(1-margin).
-    states = list(ladder.states)
+    states = ladder.states
     pos = [len(states) - 1 for _ in blocks]  # index into ladder per block
     times = [block_time(b, 1.0) for b in blocks]
+    energies = [_block_energy(power, b, t, 1.0) for b, t in zip(blocks, times)]
     budget_total = deadline_s * (1.0 - error_margin)
+    total = {"t": sum(times)}
 
-    def energy_at(i: int, p: int) -> float:
-        f = states[p]
-        t = block_time(blocks[i], f)
-        return _block_energy(power, blocks[i], t, f)
+    def on_step(i: int, dt: float) -> None:
+        total["t"] += dt
 
-    energies = [energy_at(i, pos[i]) for i in range(n)]
-    total_t = sum(times)
-    feasible = total_t <= budget_total + 1e-9
-
-    # max-heap on savings rate; (-rate, i, target_pos) entries, lazily validated
-    def step_gain(i: int) -> tuple | None:
-        p = pos[i]
-        if p == 0:
-            return None
-        f_lo = states[p - 1]
-        t_lo = block_time(blocks[i], f_lo)
-        dt = t_lo - block_time(blocks[i], states[p])
-        e_lo = _block_energy(power, blocks[i], t_lo, f_lo)
-        de = energies[i] - e_lo
-        if de <= 1e-15:
-            return None
-        rate = de / max(dt, 1e-12)
-        return (-rate, i, p - 1, t_lo, e_lo, dt)
-
-    heap = []
-    for i in range(n):
-        g = step_gain(i)
-        if g is not None:
-            heapq.heappush(heap, g)
-
-    while heap:
-        neg_rate, i, target, t_lo, e_lo, dt = heapq.heappop(heap)
-        if target != pos[i] - 1:
-            continue  # stale entry
-        if total_t + dt > budget_total + 1e-9:
-            continue  # this step no longer fits; others (Δt=0 roofline) may
-        pos[i] = target
-        total_t += dt
-        times[i] = t_lo
-        energies[i] = e_lo
-        g = step_gain(i)
-        if g is not None:
-            heapq.heappush(heap, g)
+    _run_downclock_heap(
+        n,
+        lambda i: states,
+        lambda i, f: block_time(blocks[i], f),
+        lambda i, t, f: _block_energy(power, blocks[i], t, f),
+        pos, times, energies,
+        step_ok=lambda i, dt: total["t"] + dt <= budget_total + 1e-9,
+        on_step=on_step,
+    )
 
     plans = []
     for i, b in enumerate(blocks):

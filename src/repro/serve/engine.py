@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cluster import NodeSpec, plan_cluster
 from repro.configs.base import ArchConfig
 from repro.core import (BlockInfo, RooflineTimeModel, plan_dvfs, plan_dvo)
 from repro.models import transformer as T
@@ -32,6 +33,12 @@ class ServeConfig:
     slack: float = 1.2          # deadline = slack * f_max time when no SLO given
     planner: str = "roofline"
     greedy: bool = True
+    # multi-replica decode: N replicas each decode their own batch under the
+    # shared SLO; the cluster planner picks per-replica window frequencies
+    # (slow hosts clock up, fast hosts harvest slack).  Replica 0 decodes
+    # physically in this process; the others are accounted analytically.
+    replicas: int = 1
+    replica_speeds: tuple = ()  # relative host speeds, default all-1.0
 
 
 class ServingEngine:
@@ -52,6 +59,61 @@ class ServingEngine:
         if self.cfg.n_codebooks:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None, :]
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+
+    def _replica_speeds(self) -> tuple:
+        """Host speeds normalized so replica 0 == 1.0.
+
+        The cost estimate is MEASURED on replica 0, so the planner's
+        reference node must be replica 0 — absolute speed units would give
+        it phantom slack (or phantom load).  Normalizing makes any
+        consistent unit choice valid.
+        """
+        sc = self.sc
+        if not sc.replica_speeds:
+            return (1.0,) * sc.replicas
+        speeds = tuple(float(s) for s in sc.replica_speeds)
+        if len(speeds) != sc.replicas:
+            raise ValueError(
+                f"replica_speeds has {len(speeds)} entries for "
+                f"{sc.replicas} replicas")
+        return tuple(s / speeds[0] for s in speeds)
+
+    def _plan_replicas(self, n_windows: int, window_fmax_s: float,
+                       deadline: float):
+        """Plan per-replica window frequencies under the shared SLO.
+
+        Windows are pinned to their replica (a decode stream cannot migrate),
+        so the cluster planner runs with an explicit assignment; heterogeneity
+        enters through per-replica host speeds.  Returns replica 0's slice in
+        the single-node plan shape the physical decode loop consumes.
+        """
+        from repro.core.scheduler import SchedulePlan
+        sc = self.sc
+        speeds = self._replica_speeds()
+        blocks = [BlockInfo(r * n_windows + w, window_fmax_s,
+                            roofline=self.actuator.roofline)
+                  for r in range(sc.replicas) for w in range(n_windows)]
+        assignment = [r for r in range(sc.replicas) for _ in range(n_windows)]
+        nodes = [NodeSpec(f"replica{r}", speed=speeds[r])
+                 for r in range(sc.replicas)]
+        self.cluster_plan = plan_cluster(blocks, nodes, deadline,
+                                         assignment=assignment)
+        rep0 = self.cluster_plan.node_plans[0]
+        return SchedulePlan("cluster", deadline, rep0.blocks,
+                            self.cluster_plan.feasible)
+
+    def _account_replica_tails(self, window_fmax_s: float) -> None:
+        """Analytic energy accounting for replicas 1..N-1 (simulated hosts).
+
+        Replica 0 decoded physically above; the remaining replicas' window
+        times are the cluster plan's predictions, which are already in
+        measured units (the plan was built from the measured f_max window).
+        """
+        speeds = self._replica_speeds()
+        for r, node_plan in enumerate(self.cluster_plan.node_plans[1:], 1):
+            for bp in node_plan.blocks:
+                self.ledger.record(bp.pred_time_s, bp.rel_freq)
+                self.dvo_ledger.record(window_fmax_s / speeds[r], 1.0)
 
     def generate(self, prompts: dict, n_tokens: int) -> dict:
         """Greedy-generate ``n_tokens`` for the batch with DV-DVFS windows."""
@@ -86,9 +148,14 @@ class ServingEngine:
             deadline = remaining * sc.batch / sc.slo_tokens_per_s
         else:
             deadline = window_fmax_s * n_windows * sc.slack
-        plan = plan_dvfs(blocks, deadline, planner=sc.planner) if n_windows \
-            else None
-        self.plan = plan
+        self.cluster_plan = None
+        if not n_windows:
+            plan = None
+        elif sc.replicas > 1:
+            plan = self._plan_replicas(n_windows, window_fmax_s, deadline)
+        else:
+            plan = plan_dvfs(blocks, deadline, planner=sc.planner)
+        self.plan = plan  # the plan actually driven (replica 0's slice if clustered)
         self.dvo_plan = plan_dvo(blocks, deadline) if n_windows else None
 
         for w in range(n_windows):
@@ -103,6 +170,9 @@ class ServingEngine:
             eff = self.actuator.effective_time(wall)
             self.ledger.record(eff, plan.blocks[w].rel_freq)
             self.dvo_ledger.record(wall, 1.0)
+
+        if self.cluster_plan is not None:
+            self._account_replica_tails(window_fmax_s)
 
         out = jnp.concatenate(toks, axis=1)
         return {"tokens": out, "energy": self.ledger.summary(),

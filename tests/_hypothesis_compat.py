@@ -1,0 +1,136 @@
+"""Graceful fallback when ``hypothesis`` is not installed.
+
+Property tests import ``given``/``settings``/``st`` from this module instead of
+from ``hypothesis`` directly.  When the real library is present it is re-exported
+unchanged (full shrinking, database, health checks).  When it is absent, a tiny
+shim degrades ``@given`` to a deterministic fixed-seed example sweep:
+
+  * each strategy draws from a ``random.Random`` seeded by the test name
+    (CRC32), so failures reproduce across runs and machines;
+  * the first two examples of numeric strategies are the interval endpoints and
+    the first two list examples use ``min_size``/``max_size``, so boundary bugs
+    still get hit;
+  * ``@settings(max_examples=N)`` bounds the sweep exactly like hypothesis.
+
+Only the strategy surface this repo uses is shimmed: ``floats``, ``integers``,
+``booleans``, ``lists``, ``sampled_from``, ``tuples``, ``just``.
+"""
+from __future__ import annotations
+
+try:  # real hypothesis wins whenever it is importable
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        """One drawable value source; ``example(rnd, i)`` is the i-th draw."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rnd: random.Random, i: int):
+            return self._draw(rnd, i)
+
+    class _Namespace:
+        """Stand-in for ``hypothesis.strategies``."""
+
+        @staticmethod
+        def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+            def draw(rnd, i):
+                if i == 0:
+                    return float(min_value)
+                if i == 1:
+                    return float(max_value)
+                return rnd.uniform(float(min_value), float(max_value))
+            return _Strategy(draw)
+
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            def draw(rnd, i):
+                if i == 0:
+                    return int(min_value)
+                if i == 1:
+                    return int(max_value)
+                return rnd.randint(int(min_value), int(max_value))
+            return _Strategy(draw)
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rnd, i: bool(i % 2) if i < 2
+                             else rnd.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            elems = list(elements)
+            return _Strategy(lambda rnd, i: elems[i % len(elems)] if i < len(elems)
+                             else rnd.choice(elems))
+
+        @staticmethod
+        def just(value) -> _Strategy:
+            return _Strategy(lambda rnd, i: value)
+
+        @staticmethod
+        def lists(elements: _Strategy, *, min_size: int = 0,
+                  max_size: int = 10, **_kw) -> _Strategy:
+            def draw(rnd, i):
+                if i == 0:
+                    size = min_size
+                elif i == 1:
+                    size = max_size
+                else:
+                    size = rnd.randint(min_size, max_size)
+                return [elements.example(rnd, i + 2 + j) for j in range(size)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strategies: _Strategy) -> _Strategy:
+            return _Strategy(lambda rnd, i: tuple(
+                s.example(rnd, i + 2) for s in strategies))
+
+    st = _Namespace()
+
+    def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_kw):
+        """Record ``max_examples``; every other hypothesis knob is a no-op."""
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_shim_max_examples",
+                            getattr(fn, "_shim_max_examples",
+                                    _DEFAULT_MAX_EXAMPLES))
+                seed = zlib.crc32(fn.__qualname__.encode())
+                for i in range(n):
+                    rnd = random.Random(seed * 1_000_003 + i)
+                    drawn = [s.example(rnd, i) for s in arg_strategies]
+                    drawn_kw = {k: s.example(rnd, i)
+                                for k, s in kw_strategies.items()}
+                    try:
+                        fn(*args, *drawn, **kwargs, **drawn_kw)
+                    except Exception as exc:  # re-raise with the failing draw
+                        raise AssertionError(
+                            f"{fn.__qualname__} failed on shim example {i}: "
+                            f"args={drawn} kwargs={drawn_kw}") from exc
+            # pytest must not mistake strategy parameters for fixtures: hide
+            # the wrapped signature (functools.wraps exposes it otherwise)
+            if hasattr(wrapper, "__wrapped__"):
+                del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -1,8 +1,7 @@
 """DV-DVFS scheduler invariants — unit + hypothesis property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (DEFAULT_LADDER, TPU_V5E_POWER, BlockInfo,
                         FrequencyLadder, PowerModel, RooflineTimeModel,

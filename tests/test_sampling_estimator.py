@@ -1,8 +1,7 @@
 """Sampling estimator: CI coverage, overhead contract, cost-model calibration."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (CostModel, RooflineTimeModel, required_sample_size,
                         sample_block_cost)

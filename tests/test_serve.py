@@ -9,14 +9,16 @@ from repro.models import transformer as T
 from repro.serve import ServeConfig, ServingEngine
 
 
-def _engine(planner="roofline", window=8, mem_bound=True):
+def _engine(planner="roofline", window=8, mem_bound=True, **sc_kw):
     cfg = smoke_config("olmo-1b")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     rt = RooflineTimeModel.from_counts(
         flops=1e9, hbm_bytes=8e9 if mem_bound else 1e6, coll_bytes=0)
+    sc_kw.setdefault("slack", 1.15)
     eng = ServingEngine(cfg, params,
                         ServeConfig(batch=2, max_len=128, window=window,
-                                    planner=planner, slack=1.15), roofline=rt)
+                                    planner=planner, **sc_kw),
+                        roofline=rt)
     prompts = {"tokens": jnp.asarray(
         np.random.default_rng(0).integers(1, cfg.vocab, (2, 16)), jnp.int32)}
     return eng, prompts
@@ -55,3 +57,33 @@ def test_short_generation_no_windows():
     eng, prompts = _engine(window=16)
     out = eng.generate(prompts, n_tokens=8)
     assert out["energy"]["busy_j"] == out["energy_dvo"]["busy_j"]
+
+
+def test_multi_replica_decode_windows():
+    """3 heterogeneous replicas under a shared SLO: the cluster planner pins
+    windows to their replica, slow hosts clock higher than fast ones, and
+    the aggregate still beats DVO.  Tokens are unchanged vs single-replica
+    (replica 0 decodes physically either way)."""
+    eng, prompts = _engine(replicas=3, replica_speeds=(1.0, 0.8, 1.25),
+                           slack=1.4)
+    out = eng.generate(prompts, n_tokens=32)
+    single, prompts1 = _engine(slack=1.4)
+    out1 = single.generate(prompts1, n_tokens=32)
+    np.testing.assert_array_equal(np.asarray(out["tokens"]),
+                                  np.asarray(out1["tokens"]))
+
+    cp = eng.cluster_plan
+    assert cp is not None and cp.feasible
+    # every window is pinned to its own replica
+    n_windows = len(cp.node_plans[0].blocks)
+    for r, np_ in enumerate(cp.node_plans):
+        assert len(np_.blocks) == n_windows
+        assert all(r * n_windows <= bp.index < (r + 1) * n_windows
+                   for bp in np_.blocks)
+    # slowest host needs the highest clocks (same work, same deadline)
+    mean_freq = [np.mean([bp.rel_freq for bp in p.blocks])
+                 for p in cp.node_plans]
+    assert mean_freq[1] >= mean_freq[2]
+    # aggregate across replicas still saves energy vs all-f_max
+    assert out["energy"]["busy_j"] <= out["energy_dvo"]["busy_j"] * 1.01
+    assert out["energy"]["steps"] > out1["energy"]["steps"]
