@@ -29,10 +29,14 @@ frequencies under the shared deadline.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
-from repro.core.scheduler import (BlockInfo, BlockPlan, _run_downclock_heap,
-                                  plan_dvfs)
+import numpy as np
+
+from repro.core.scheduler import (BlockInfo, BlockPlan, _make_plans,
+                                  _run_downclock_tables, block_time_table,
+                                  busy_energy_table, plan_dvfs)
 from repro.cluster.node import NodeSpec
 
 __all__ = ["NodePlan", "ClusterPlan", "assign_blocks", "plan_cluster",
@@ -46,11 +50,11 @@ class NodePlan:
     node: NodeSpec
     blocks: tuple
 
-    @property
+    @functools.cached_property
     def pred_finish_s(self) -> float:
         return sum(b.pred_time_s for b in self.blocks)
 
-    @property
+    @functools.cached_property
     def pred_energy_j(self) -> float:
         return sum(b.pred_energy_j for b in self.blocks)
 
@@ -62,13 +66,13 @@ class ClusterPlan:
     node_plans: tuple
     feasible: bool
 
-    @property
+    @functools.cached_property
     def pred_makespan_s(self) -> float:
-        return max((np.pred_finish_s for np in self.node_plans), default=0.0)
+        return max((np_.pred_finish_s for np_ in self.node_plans), default=0.0)
 
-    @property
+    @functools.cached_property
     def pred_total_energy(self) -> float:
-        return sum(np.pred_energy_j for np in self.node_plans)
+        return sum(np_.pred_energy_j for np_ in self.node_plans)
 
     def assignment(self) -> dict:
         """block index -> node name."""
@@ -180,8 +184,82 @@ def plan_cluster(
     groups = assign_blocks(blocks, nodes, strategy=assignment,
                            deadline_s=budget)
 
-    # one flat item per (node, block); the shared greedy core runs one heap
-    # across the whole cluster, with per-NODE budgets gating each step
+    # one flat item per (node, block), node-major; each node's time/energy
+    # tables are built in one vectorized pass on its own ladder/power/speed,
+    # then stacked into (n_items, max_states) arrays (+inf padding beyond a
+    # node's ladder) so the shared table-driven greedy runs one heap across
+    # the whole cluster with per-NODE budgets gating each step
+    s_max = max(len(nd.ladder.states) for nd in nodes)
+    n_items = sum(len(g) for g in groups)
+    times_tab = np.full((n_items, s_max), np.inf)
+    energies_tab = np.full((n_items, s_max), np.inf)
+    pos = np.empty(n_items, dtype=np.int64)
+    times = np.empty(n_items)
+    energies = np.empty(n_items)
+    group = np.empty(n_items, dtype=np.int64)
+    group_total = np.zeros(len(nodes))
+    lo = 0
+    for k, (nd, grp) in enumerate(zip(nodes, groups)):
+        hi = lo + len(grp)
+        states = nd.ladder.states
+        utils = np.fromiter((b.util for b in grp), np.float64, count=len(grp))
+        tab = block_time_table(grp, states) / nd.speed
+        times_tab[lo:hi, :len(states)] = tab
+        energies_tab[lo:hi, :len(states)] = busy_energy_table(
+            tab, utils, states, nd.power)
+        t1 = block_time_table(grp, (1.0,))[:, 0] / nd.speed
+        times[lo:hi] = t1
+        energies[lo:hi] = busy_energy_table(t1[:, None], utils, (1.0,),
+                                            nd.power)[:, 0]
+        pos[lo:hi] = len(states) - 1
+        group[lo:hi] = k
+        group_total[k] = sum(t1.tolist())
+        lo = hi
+
+    _run_downclock_tables(times_tab, energies_tab, pos, times, energies,
+                          group, group_total,
+                          np.full(len(nodes), budget))
+
+    node_plans = []
+    lo = 0
+    for nd, grp in zip(nodes, groups):
+        hi = lo + len(grp)
+        slot = deadline_s / max(len(grp), 1)
+        bps = _make_plans(grp, slot,
+                          (nd.ladder.states[p] for p in pos[lo:hi].tolist()),
+                          times[lo:hi].tolist(), energies[lo:hi].tolist())
+        node_plans.append(NodePlan(nd, bps))
+        lo = hi
+    feasible = all(t <= deadline_s + 1e-9 for t in group_total.tolist())
+    return ClusterPlan("cluster", deadline_s, tuple(node_plans), feasible)
+
+
+def plan_cluster_reference(
+    blocks: Sequence[BlockInfo],
+    nodes: Sequence[NodeSpec],
+    deadline_s: float,
+    *,
+    assignment="auto",
+    error_margin: float = 0.05,
+) -> ClusterPlan:
+    """Original loop-bound ``plan_cluster`` (equivalence oracle — do not use
+    in hot paths; see ``repro.core._reference``)."""
+    from repro.core._reference import run_downclock_heap_loops
+    if not nodes:
+        raise ValueError("need at least one node")
+    if isinstance(assignment, str) and assignment == "auto":
+        candidates = [plan_cluster_reference(blocks, nodes, deadline_s,
+                                             assignment=s,
+                                             error_margin=error_margin)
+                      for s in ("lpt", "pack", "round_robin")]
+        feasible = [p for p in candidates if p.feasible]
+        if feasible:
+            return min(feasible, key=lambda p: p.pred_total_energy)
+        return min(candidates, key=lambda p: p.pred_makespan_s)
+    budget = deadline_s * (1.0 - error_margin)
+    groups = assign_blocks(blocks, nodes, strategy=assignment,
+                           deadline_s=budget)
+
     items = [(k, j) for k in range(len(nodes))
              for j in range(len(groups[k]))]
     pos = [len(nodes[k].ladder.states) - 1 for k, _ in items]
@@ -194,7 +272,7 @@ def plan_cluster(
     def on_step(i: int, dt: float) -> None:
         node_t[items[i][0]] += dt
 
-    _run_downclock_heap(
+    run_downclock_heap_loops(
         len(items),
         lambda i: nodes[items[i][0]].ladder.states,
         lambda i, f: nodes[items[i][0]].block_time(

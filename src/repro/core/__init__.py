@@ -8,9 +8,11 @@ from repro.core.energy import (CPU_PAPER_POWER, DEFAULT_LADDER, TPU_V5E_POWER,
                                FrequencyLadder, PowerModel)
 from repro.core.estimator import (V5E, ChipSpec, CostModel, RooflineTerms,
                                   RooflineTimeModel)
-from repro.core.sampling import BlockEstimate, required_sample_size, sample_block_cost
+from repro.core.sampling import (BlockEstimate, required_sample_size,
+                                 sample_block_cost, sample_blocks)
 from repro.core.scheduler import (BlockInfo, BlockPlan, ExecutionReport,
-                                  SchedulePlan, block_time, plan_dvfs, plan_dvo,
+                                  SchedulePlan, block_time, block_time_table,
+                                  busy_energy_table, plan_dvfs, plan_dvo,
                                   simulate)
 from repro.core.variety import (VarietyStats, variety_stats, zipf_block_sizes,
                                 zipf_weights)
@@ -20,7 +22,9 @@ __all__ = [
     "PowerModel",
     "V5E", "ChipSpec", "CostModel", "RooflineTerms", "RooflineTimeModel",
     "BlockEstimate", "required_sample_size", "sample_block_cost",
+    "sample_blocks",
     "BlockInfo", "BlockPlan", "ExecutionReport", "SchedulePlan",
-    "block_time", "plan_dvfs", "plan_dvo", "simulate",
+    "block_time", "block_time_table", "busy_energy_table",
+    "plan_dvfs", "plan_dvo", "simulate",
     "VarietyStats", "variety_stats", "zipf_block_sizes", "zipf_weights",
 ]

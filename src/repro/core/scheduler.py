@@ -20,18 +20,32 @@ Planners:
                   collective-bound blocks down-clock to their zero-cost point for FREE
                   (Δtime = 0), so the greedy takes those first.
   * DVO baseline — Data-Variety-Oblivious: f_max everywhere (paper's comparison).
+
+Hot path
+========
+All planners run off per-block ``(n_blocks, n_states)`` time/energy tables
+(``block_time_table`` / ``busy_energy_table``) precomputed once as NumPy
+arrays; the shared ΔE/Δt greedy (``_run_downclock_tables``) and the paper
+planner's repair pass are heap-driven table lookups, so planning scales to
+100k+ blocks (see ``benchmarks/run.py`` section ``planner_scale``).  The
+original loop implementations live in ``repro.core._reference`` as
+equivalence oracles: same frequencies, energies within 1e-9.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import heapq
 from typing import Sequence
+
+import numpy as np
 
 from repro.core.energy import DEFAULT_LADDER, FrequencyLadder, PowerModel, TPU_V5E_POWER
 from repro.core.estimator import RooflineTimeModel
 
 __all__ = [
     "BlockInfo", "BlockPlan", "SchedulePlan", "ExecutionReport",
+    "block_time_table", "busy_energy_table",
     "plan_dvfs", "plan_dvo", "simulate",
 ]
 
@@ -63,11 +77,13 @@ class SchedulePlan:
     blocks: tuple
     feasible: bool
 
-    @property
+    # cached: planner loops and the auto-assignment search read these totals
+    # repeatedly; re-summing 100k blocks per access was itself a hot spot
+    @functools.cached_property
     def pred_total_time(self) -> float:
         return sum(b.pred_time_s for b in self.blocks)
 
-    @property
+    @functools.cached_property
     def pred_total_energy(self) -> float:
         return sum(b.pred_energy_j for b in self.blocks)
 
@@ -134,53 +150,295 @@ def _block_energy(power: PowerModel, block: BlockInfo, t: float,
     return power.busy_energy(t, f, util=block.util)
 
 
-def _run_downclock_heap(n: int, states_of, time_of, energy_of,
-                        pos: list, times: list, energies: list,
-                        step_ok, on_step=None) -> None:
-    """Shared ΔE/Δt greedy core (used single-node and cluster-wide).
+# --- vectorized planning tables --------------------------------------------
 
-    Repeatedly takes the single down-clock step with the best energy-saved /
-    time-added ratio while its governing budget accepts it, via a lazily
-    validated max-heap.  Mutates ``pos``/``times``/``energies`` in place.
+def block_time_table(blocks: Sequence[BlockInfo], states) -> np.ndarray:
+    """Per-block processing times: ``out[i, j] == block_time(blocks[i], states[j])``.
 
-      states_of(i)      item i's ladder states (ascending, ends at f_max)
-      time_of(i, f)     item i's processing time at frequency f
-      energy_of(i,t,f)  item i's busy energy for t seconds at f
-      step_ok(i, dt)    True if adding dt to item i's budget still fits
-      on_step(i, dt)    budget bookkeeping after a step is taken
+    One vectorized pass replaces n·s ``block_time`` calls; every arithmetic
+    step mirrors the scalar code op-for-op so table entries are bitwise
+    identical to what the loop reference computes.
     """
-    def step_gain(i):
-        p = pos[i]
-        if p == 0:
-            return None
-        f_lo = states_of(i)[p - 1]
-        t_lo = time_of(i, f_lo)
-        dt = t_lo - times[i]
-        e_lo = energy_of(i, t_lo, f_lo)
-        de = energies[i] - e_lo
-        if de <= 1e-15:
-            return None
-        return (-de / max(dt, 1e-12), i, p - 1, t_lo, e_lo, dt)
+    n = len(blocks)
+    states_arr = np.asarray(states, dtype=np.float64)
+    f_safe = np.maximum(states_arr, 1e-6)
+    est = np.fromiter((b.est_time_fmax for b in blocks), np.float64, count=n)
+    times = est[:, None] / f_safe[None, :]
 
-    heap = []
-    for i in range(n):
-        g = step_gain(i)
-        if g is not None:
-            heapq.heappush(heap, g)
+    roof = [i for i, b in enumerate(blocks) if b.roofline is not None]
+    if roof:
+        terms = [blocks[i].roofline.terms for i in roof]
+        t_comp = np.fromiter((t.t_comp for t in terms), np.float64, len(roof))
+        t_mem = np.fromiter((t.t_mem for t in terms), np.float64, len(roof))
+        t_coll = np.fromiter((t.t_coll for t in terms), np.float64, len(roof))
+        t_fixed = np.fromiter((t.t_fixed for t in terms), np.float64, len(roof))
+        time_at_fmax = np.maximum(np.maximum(t_comp, t_mem), t_coll) + t_fixed
+        scale = est[roof] / np.maximum(time_at_fmax, 1e-12)
+        shaped = np.maximum(
+            np.maximum(t_comp[:, None] / f_safe[None, :], t_mem[:, None]),
+            t_coll[:, None]) + t_fixed[:, None]
+        times[roof] = shaped * scale[:, None]
+    return times
+
+
+def busy_energy_table(times_tab: np.ndarray, utils: np.ndarray, states,
+                      power: PowerModel) -> np.ndarray:
+    """Busy energies for a time table: ``out[i,j] == busy_energy(t[i,j], states[j])``.
+
+    The per-state ``f**alpha`` factors are evaluated with scalar python pow —
+    the same libm call ``PowerModel.power`` makes — so energies match the
+    scalar path bitwise.
+    """
+    fpow = np.array([float(np.clip(f, 0.0, 1.0)) ** power.alpha
+                     for f in states], dtype=np.float64)
+    util = np.clip(np.asarray(utils, dtype=np.float64), 0.0, 1.0)
+    ptab = power.p_idle + (power.p_full - power.p_idle) * util[:, None] * fpow[None, :]
+    return times_tab * ptab
+
+
+def _block_utils(blocks: Sequence[BlockInfo]) -> np.ndarray:
+    return np.fromiter((b.util for b in blocks), np.float64, count=len(blocks))
+
+
+def _make_plans(blocks, slot: float, freqs, times, energies) -> tuple:
+    """Bulk-construct BlockPlans, bypassing the frozen-dataclass __init__
+    (one object.__setattr__ per field — ~3x the cost of the plan math at
+    100k blocks).  Field semantics identical to BlockPlan(...)."""
+    new = object.__new__
+    out = []
+    for b, f, t, e in zip(blocks, freqs, times, energies):
+        bp = new(BlockPlan)
+        bp.__dict__.update(index=b.index, slot_s=slot, rel_freq=f,
+                           pred_time_s=t, pred_energy_j=e)
+        out.append(bp)
+    return tuple(out)
+
+
+def _chain_stops(energies_tab: np.ndarray, pos: np.ndarray) -> np.ndarray:
+    """Where each item's improving descent ends.
+
+    Walking down from ``pos[i]``, a step p -> p-1 is improving iff
+    ``E[i, p-1] < E[i, p] - 1e-15`` (the greedy's gate); the chain stops at
+    the first non-improving step.  One O(n_states) sweep over columns; padded
+    columns (energy +inf) never count as improving.
+    """
+    s = energies_tab.shape[1]
+    stop = pos.copy()
+    improving = energies_tab[:, :-1] < energies_tab[:, 1:] - 1e-15
+    for j in range(s - 2, -1, -1):
+        step = improving[:, j] & (stop == j + 1)
+        stop[step] = j
+    return stop
+
+
+def _downclock_sorted_scan(times_tab: np.ndarray, energies_tab: np.ndarray,
+                           pos: np.ndarray, times: np.ndarray,
+                           energies: np.ndarray, stop: np.ndarray,
+                           group_total: np.ndarray,
+                           group_budget: np.ndarray) -> bool:
+    """Single-pool greedy as one sorted pass (returns False when inapplicable).
+
+    When every item's ΔE/Δt keys are monotone along its descent chain
+    (diminishing returns — true for convex power curves, checked here at
+    runtime), the heap's pop order IS the global sort order of all chain
+    steps by ``(key, item, chain position)``: an item's next step only enters
+    the heap after its previous one, and monotone keys mean it can never
+    overtake.  So the greedy becomes: sort all candidate steps once, accept
+    the longest prefix whose running total fits the budget outright (no
+    rejections can occur inside it), then finish the borderline tail with a
+    short sequential scan where a rejected step retires its item — exactly
+    the heap's no-retry semantics.  Mutates state and returns True on
+    success; returns False (state untouched) for non-monotone keys, leaving
+    the heap path to handle them.
+    """
+    n = len(pos)
+    counts = pos - stop
+    idx = np.repeat(np.arange(n), counts)
+    if len(idx) == 0:
+        return True
+    starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
+    stepno = np.arange(len(idx)) - np.repeat(starts, counts)
+    levels = pos[idx] - 1 - stepno
+    t_lo = times_tab[idx, levels]
+    e_lo = energies_tab[idx, levels]
+    # first step of each chain prices off the item's exact initial values
+    # (the ladder top may not be exactly 1.0); later steps off the table
+    first = stepno == 0
+    t_hi = np.where(first, times[idx], times_tab[idx, levels + 1])
+    e_hi = np.where(first, energies[idx], energies_tab[idx, levels + 1])
+    dt = t_lo - t_hi
+    de = e_hi - e_lo
+    if not np.all(de[first] > 1e-15):
+        return False  # chain gate priced differently off-table: rare, punt
+    keys = -de / np.maximum(dt, 1e-12)
+    same = idx[1:] == idx[:-1]
+    if not np.all(keys[1:][same] >= keys[:-1][same]):
+        return False  # non-monotone chain: heap order != sort order
+
+    order = np.lexsort((-levels, idx, keys))
+    # running totals with the reference's exact accumulation order
+    totals = np.cumsum(np.concatenate((group_total, dt[order])))[1:]
+    cut = int(np.searchsorted(totals, group_budget[0] + 1e-9, side="right"))
+    acc = order[:cut]
+    final = pos.copy()
+    np.minimum.at(final, idx[acc], levels[acc])
+    if cut:
+        group_total[0] = totals[cut - 1]
+
+    # borderline tail: budget nearly spent, but smaller steps may still fit
+    total = float(group_total[0])
+    budget = float(group_budget[0])
+    tail = order[cut:]
+    ti, tl, td = idx[tail], levels[tail], dt[tail]
+    if len(tail):
+        # prune steps that can only be rejected: the running total never
+        # shrinks, so total+dt > budget+1e-9 already HERE means the step is
+        # rejected whenever the scan reaches it — and a rejected step's sole
+        # effect is retiring its item, so the step and everything after it
+        # in that item's chain can be dropped up front
+        killer = total + td > budget + 1e-9
+        by_item = np.lexsort((np.arange(len(ti)), ti))
+        gi = ti[by_item]
+        gk = killer[by_item]
+        seg_starts = np.nonzero(np.concatenate(([True], gi[1:] != gi[:-1])))[0]
+        cums = np.cumsum(gk)
+        seg_len = np.diff(np.concatenate((seg_starts, [len(gk)])))
+        base = np.repeat(cums[seg_starts] - gk[seg_starts], seg_len)
+        keep = np.empty(len(gk), dtype=bool)
+        keep[by_item] = cums - base == 0  # nothing killed up to & incl. self
+        ti, tl, td = ti[keep], tl[keep], td[keep]
+        tail = tail[keep]
+    alive = np.ones(n, dtype=bool)
+    accepted = np.zeros(len(tail), dtype=bool)
+    # rounds: within one round no item dies until the first over-budget step,
+    # so the accept/reject outcome of the whole stretch up to it is a cumsum
+    # (dead items' steps contribute +0.0 — bitwise-neutral for dt >= 0, so
+    # the running total matches the reference's skip-the-dead accumulation).
+    # Each round retires exactly one item; kill-heavy tails fall back to the
+    # exact sequential scan after a few rounds (rounds only pay off when the
+    # tail is accept-heavy).
+    start, rounds = 0, 0
+    while start < len(tail) and rounds < 8:
+        rounds += 1
+        valid = alive[ti[start:]]
+        # seed the cumsum with the running total so the accumulation order
+        # (and hence every last-ulp) matches the reference's `total += dt`
+        tot = np.cumsum(np.concatenate(
+            ([total], np.where(valid, td[start:], 0.0))))[1:]
+        viol = np.nonzero(valid & (tot > budget + 1e-9))[0]
+        if len(viol) == 0:
+            accepted[start:] = valid
+            if np.any(valid):
+                total = float(tot[-1])
+            start = len(tail)
+            break
+        r = int(viol[0])
+        accepted[start:start + r] = valid[:r]
+        if r:
+            total = float(tot[r - 1])
+        alive[ti[start + r]] = False
+        start += r + 1
+    if start < len(tail):  # round cap hit: finish with the sequential scan
+        fin = final.copy()
+        np.minimum.at(fin, ti[accepted], tl[accepted])
+        ff = fin.tolist()
+        dd = (~alive).tolist()
+        for j in range(start, len(tail)):
+            i = ti[j]
+            if dd[i] or tl[j] != ff[i] - 1:
+                continue
+            if total + td[j] <= budget + 1e-9:
+                ff[i] = tl[j]
+                total += td[j]
+            else:
+                dd[i] = True
+        final = np.asarray(ff)
+    else:
+        np.minimum.at(final, ti[accepted], tl[accepted])
+    group_total[0] = total
+    moved = final < pos
+    rows = np.arange(n)
+    times[moved] = times_tab[rows[moved], final[moved]]
+    energies[moved] = energies_tab[rows[moved], final[moved]]
+    pos[moved] = final[moved]
+    return True
+
+
+def _run_downclock_tables(times_tab: np.ndarray, energies_tab: np.ndarray,
+                          pos: np.ndarray, times: np.ndarray,
+                          energies: np.ndarray, group: np.ndarray,
+                          group_total: np.ndarray,
+                          group_budget: np.ndarray) -> None:
+    """Shared ΔE/Δt greedy core over precomputed tables (single-node + cluster).
+
+    Exact table-driven analogue of the callback greedy in
+    ``repro.core._reference.run_downclock_heap_loops``: repeatedly take the
+    single down-clock step with the best energy-saved / time-added ratio
+    while the stepped item's budget pool accepts it.  ``group`` maps each
+    item to a budget pool (one pool single-node, one per node cluster-wide);
+    ``group_total``/``group_budget`` carry the pools' running busy time and
+    budgets.  ``pos``/``times``/``energies``/``group_total`` are mutated in
+    place.
+
+    Fast path: when every item's improving-descent chain fits its pool
+    budget, the greedy provably accepts every step (per-step Δt >= 0, so
+    pool totals rise monotonically toward the final sum) — resolved with
+    pure array ops, no heap.
+    """
+    n = len(pos)
+    if n == 0:
+        return
+    rows = np.arange(n)
+    stop = _chain_stops(energies_tab, pos)
+    moved = stop < pos  # unmoved items keep their exact initial values
+    dt_group = np.zeros(len(group_total))
+    np.add.at(dt_group, group[moved],
+              times_tab[rows[moved], stop[moved]] - times[moved])
+    if np.all(group_total + dt_group <= group_budget + 1e-9):
+        pos[moved] = stop[moved]
+        times[moved] = times_tab[rows[moved], stop[moved]]
+        energies[moved] = energies_tab[rows[moved], stop[moved]]
+        group_total += dt_group
+        return
+
+    if len(group_total) == 1:
+        # budget-binding single pool: the sorted-scan path resolves the bulk
+        # of the greedy with array ops when it is provably heap-equivalent
+        if _downclock_sorted_scan(times_tab, energies_tab, pos, times,
+                                  energies, stop, group_total, group_budget):
+            return
+
+    # budget-binding pools: lazily validated max-heap over table lookups
+    cand = np.nonzero(pos > 0)[0]
+    p = pos[cand]
+    t_lo = times_tab[cand, p - 1]
+    e_lo = energies_tab[cand, p - 1]
+    dt = t_lo - times[cand]
+    de = energies[cand] - e_lo
+    keep = de > 1e-15
+    heap = list(zip((-de[keep] / np.maximum(dt[keep], 1e-12)).tolist(),
+                    cand[keep].tolist(), (p[keep] - 1).tolist(),
+                    t_lo[keep].tolist(), e_lo[keep].tolist(),
+                    dt[keep].tolist()))
+    heapq.heapify(heap)
     while heap:
-        _, i, target, t_lo, e_lo, dt = heapq.heappop(heap)
+        _, i, target, t_lo_i, e_lo_i, dt_i = heapq.heappop(heap)
         if target != pos[i] - 1:
             continue  # stale entry
-        if not step_ok(i, dt):
-            continue  # this budget is out of slack; other items may still fit
+        g = group[i]
+        if not group_total[g] + dt_i <= group_budget[g] + 1e-9:
+            continue  # this pool is out of slack; other items may still fit
         pos[i] = target
-        times[i] = t_lo
-        energies[i] = e_lo
-        if on_step is not None:
-            on_step(i, dt)
-        g = step_gain(i)
-        if g is not None:
-            heapq.heappush(heap, g)
+        times[i] = t_lo_i
+        energies[i] = e_lo_i
+        group_total[g] += dt_i
+        if target > 0:
+            t2 = float(times_tab[i, target - 1])
+            e2 = float(energies_tab[i, target - 1])
+            de2 = e_lo_i - e2
+            if de2 > 1e-15:
+                heapq.heappush(heap, (-de2 / max(t2 - t_lo_i, 1e-12), i,
+                                      target - 1, t2, e2, t2 - t_lo_i))
 
 
 def plan_dvfs(
@@ -208,81 +466,87 @@ def plan_dvfs(
         planner = "global"
 
     slot = deadline_s / n  # Algorithm 1 line 3: equal time slots
-
-    def margin_for(b: BlockInfo) -> float:
-        return max(error_margin, b.est_rel_halfwidth) if adaptive_margin \
-            else error_margin
+    states = ladder.states
+    s = len(states)
+    rows = np.arange(n)
+    utils = _block_utils(blocks)
+    times_tab = block_time_table(blocks, states)
+    energies_tab = busy_energy_table(times_tab, utils, states, power)
 
     if planner == "paper":
-        # Per-slot frequency choice; a block that overflows its slot even at f_max
-        # simply runs at f_max (cheap blocks' slack absorbs the overflow).
-        freqs = []
-        for b in blocks:
-            budget = slot * (1.0 - margin_for(b))
-            freqs.append(_required_freq(b, budget, ladder, power))
-        # Algorithm 1 line 5 (while TPT < D): repair pass — if the per-slot plan
-        # still overruns the total deadline, undo the down-clocks that cost the most
-        # time per joule saved until TPT fits.
-        state_idx = {round(f, 6): i for i, f in enumerate(ladder.states)}
-        pos = [state_idx[round(f, 6)] for f in freqs]
-        times = [block_time(b, ladder.states[p]) for b, p in zip(blocks, pos)]
-        total_t = sum(times)
+        # Per-slot frequency choice (Algorithm 1's lowest-feasible rule,
+        # energy-clamped — see _required_freq): ascending state sweep keeps
+        # the lowest state within 1e-15 of the feasible energy minimum.  A
+        # block that overflows its slot even at f_max runs at f_max.
+        if adaptive_margin:
+            hw = np.fromiter((b.est_rel_halfwidth for b in blocks),
+                             np.float64, count=n)
+            margins = np.maximum(error_margin, hw)
+        else:
+            margins = np.full(n, error_margin)
+        budgets = slot * (1.0 - margins)
+        best_e = np.full(n, np.inf)
+        best_pos = np.full(n, -1, dtype=np.int64)
+        for j in range(s):
+            e = energies_tab[:, j]
+            upd = (times_tab[:, j] <= budgets + 1e-12) & (e < best_e - 1e-15)
+            best_e[upd] = e[upd]
+            best_pos[upd] = j
+        pos = np.where((best_pos < 0) | (budgets <= 0), s - 1, best_pos)
+        times = times_tab[rows, pos].copy()
+        energies = energies_tab[rows, pos].copy()
+        # Algorithm 1 line 5 (while TPT < D): repair pass — if the per-slot
+        # plan still overruns the total deadline, undo the down-clocks that
+        # cost the most time per joule saved until TPT fits.  Heap-driven:
+        # a block's up-step rate only changes when that block steps, so lazy
+        # invalidation reproduces the full O(n·states) rescan exactly.
+        total_t = sum(times.tolist())
         target = deadline_s * (1.0 - error_margin)
-        while total_t > target + 1e-9:
-            best, best_rate = None, -1.0
-            for i, b in enumerate(blocks):
-                if pos[i] >= len(ladder.states) - 1:
-                    continue
-                f_hi = ladder.states[pos[i] + 1]
-                dt = times[i] - block_time(b, f_hi)  # time recovered (>=0)
-                de = (_block_energy(power, b, block_time(b, f_hi), f_hi)
-                      - _block_energy(power, b, times[i], ladder.states[pos[i]]))
-                rate = dt / max(de, 1e-12)  # time recovered per extra joule
-                if rate > best_rate:
-                    best, best_rate = i, rate
-            if best is None:
-                break  # everything already at f_max
-            pos[best] += 1
-            new_t = block_time(blocks[best], ladder.states[pos[best]])
-            total_t += new_t - times[best]
-            times[best] = new_t
-        plans = []
-        for i, b in enumerate(blocks):
-            f = ladder.states[pos[i]]
-            plans.append(BlockPlan(b.index, slot, f, times[i],
-                                   _block_energy(power, b, times[i], f)))
-        feasible = total_t <= deadline_s + 1e-9
-        return SchedulePlan("paper", deadline_s, tuple(plans), feasible)
+        if total_t > target + 1e-9:
+            cand = np.nonzero(pos < s - 1)[0]
+            t_hi = times_tab[cand, pos[cand] + 1]
+            e_hi = energies_tab[cand, pos[cand] + 1]
+            rates = (times[cand] - t_hi) / np.maximum(e_hi - energies[cand],
+                                                      1e-12)
+            heap = list(zip((-rates).tolist(), cand.tolist(),
+                            (pos[cand] + 1).tolist(), t_hi.tolist(),
+                            e_hi.tolist()))
+            heapq.heapify(heap)
+            while total_t > target + 1e-9 and heap:
+                _, i, tgt, t_hi_i, e_hi_i = heapq.heappop(heap)
+                if tgt != pos[i] + 1:
+                    continue  # stale entry
+                pos[i] = tgt
+                total_t += t_hi_i - times[i]
+                times[i] = t_hi_i
+                energies[i] = e_hi_i
+                if tgt < s - 1:
+                    t2 = float(times_tab[i, tgt + 1])
+                    e2 = float(energies_tab[i, tgt + 1])
+                    rate2 = (t_hi_i - t2) / max(e2 - e_hi_i, 1e-12)
+                    heapq.heappush(heap, (-rate2, i, tgt + 1, t2, e2))
+        plans = _make_plans(blocks, slot, (states[p] for p in pos.tolist()),
+                            times.tolist(), energies.tolist())
+        feasible = bool(total_t <= deadline_s + 1e-9)
+        return SchedulePlan("paper", deadline_s, plans, feasible)
 
     # --- global greedy ("global" / "roofline") ------------------------------
-    # state: per-block ladder position (start at f_max); lower the block whose next
-    # down-step has the best ΔE/Δt while total time fits deadline*(1-margin).
-    states = ladder.states
-    pos = [len(states) - 1 for _ in blocks]  # index into ladder per block
-    times = [block_time(b, 1.0) for b in blocks]
-    energies = [_block_energy(power, b, t, 1.0) for b, t in zip(blocks, times)]
-    budget_total = deadline_s * (1.0 - error_margin)
-    total = {"t": sum(times)}
-
-    def on_step(i: int, dt: float) -> None:
-        total["t"] += dt
-
-    _run_downclock_heap(
-        n,
-        lambda i: states,
-        lambda i, f: block_time(blocks[i], f),
-        lambda i, t, f: _block_energy(power, blocks[i], t, f),
-        pos, times, energies,
-        step_ok=lambda i, dt: total["t"] + dt <= budget_total + 1e-9,
-        on_step=on_step,
-    )
-
-    plans = []
-    for i, b in enumerate(blocks):
-        f = states[pos[i]]
-        plans.append(BlockPlan(b.index, slot, f, times[i], energies[i]))
-    feasible = sum(times) <= deadline_s + 1e-9
-    return SchedulePlan(planner, deadline_s, tuple(plans), feasible)
+    # state: per-block ladder position (start at f_max); lower the block whose
+    # next down-step has the best ΔE/Δt while total time fits
+    # deadline*(1-margin).  Initial times/energies at rel_freq=1.0 exactly
+    # (the ladder top may sit within 1e-9 of 1.0 without being 1.0).
+    pos = np.full(n, s - 1, dtype=np.int64)
+    times = block_time_table(blocks, (1.0,))[:, 0]
+    energies = busy_energy_table(times[:, None], utils, (1.0,), power)[:, 0]
+    group_total = np.array([sum(times.tolist())])
+    group_budget = np.array([deadline_s * (1.0 - error_margin)])
+    _run_downclock_tables(times_tab, energies_tab, pos, times, energies,
+                          np.zeros(n, dtype=np.int64), group_total,
+                          group_budget)
+    plans = _make_plans(blocks, slot, (states[p] for p in pos.tolist()),
+                        times.tolist(), energies.tolist())
+    feasible = sum(times.tolist()) <= deadline_s + 1e-9
+    return SchedulePlan(planner, deadline_s, plans, feasible)
 
 
 def plan_dvo(
@@ -294,13 +558,13 @@ def plan_dvo(
     """Data-Variety-Oblivious baseline: everything at f_max, same slot layout."""
     n = max(len(blocks), 1)
     slot = deadline_s / n
-    plans = []
-    for b in blocks:
-        t = block_time(b, 1.0)
-        plans.append(BlockPlan(b.index, slot, 1.0, t,
-                               _block_energy(power, b, t, 1.0)))
-    feasible = sum(p.pred_time_s for p in plans) <= deadline_s + 1e-9
-    return SchedulePlan("dvo", deadline_s, tuple(plans), feasible)
+    times = block_time_table(blocks, (1.0,))[:, 0]
+    energies = busy_energy_table(times[:, None], _block_utils(blocks), (1.0,),
+                                 power)[:, 0]
+    plans = _make_plans(blocks, slot, (1.0 for _ in blocks), times.tolist(),
+                        energies.tolist())
+    feasible = sum(times.tolist()) <= deadline_s + 1e-9
+    return SchedulePlan("dvo", deadline_s, plans, feasible)
 
 
 def simulate(

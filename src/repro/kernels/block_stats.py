@@ -6,8 +6,19 @@ a token-mass proxy (sum of ids).  Doing this in one pass keeps the sampling
 overhead at the paper's <1 % contract: a single streamed read of the block shard,
 one VMEM-resident accumulator, no intermediate materialization.
 
-Grid = (row_tiles,); the (3,)-vector accumulator output is revisited by every
-step (Pallas output-accumulation pattern).
+Two entry points:
+
+  * ``block_stats_pallas``          one block:   (N, L) -> (3,)
+        grid = (row_tiles,); the (3,)-vector accumulator output is revisited
+        by every step (Pallas output-accumulation pattern).  Ragged N is
+        padded to the tile size and the pad rows are masked out of the stats.
+  * ``block_stats_batched_pallas``  whole dataset: (n_blocks, R, L) -> (n_blocks, 3)
+        grid = (n_blocks, row_tiles): ONE dispatch for every block instead of
+        one ``pallas_call`` per block, with a per-block valid-row count for
+        ragged block sizes (pad rows masked the same way).
+
+``interpret=None`` resolves per backend: interpret (python) execution
+everywhere except a real TPU, where the Mosaic kernel compiles.
 """
 from __future__ import annotations
 
@@ -17,45 +28,125 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["block_stats_kernel", "block_stats_pallas"]
+__all__ = ["block_stats_kernel", "block_stats_pallas",
+           "block_stats_batched_kernel", "block_stats_batched_pallas"]
 
 
-def block_stats_kernel(tok_ref, out_ref, *, pattern: tuple, block_rows: int):
-    i = pl.program_id(0)
+def _resolve_interpret(interpret: bool | None) -> bool:
+    """Backend-aware default: compile only where Mosaic can (TPU)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
 
-    @pl.when(i == 0)
-    def _init():
-        out_ref[:] = jnp.zeros_like(out_ref)
 
-    toks = tok_ref[:]                          # (rows, L) int32
-    nonpad = (toks != 0).astype(jnp.float32).sum()
-    mass = (toks.astype(jnp.float32)).sum()
+def _tile_stats(toks, row_mask, pattern: tuple):
+    """Masked (nonpad, matches, mass) for one (rows, L) tile.
+
+    ``row_mask`` is (rows, 1) float32: 1 for real rows, 0 for padding — rows
+    are either fully valid or pure pad, so masking whole rows is exact.
+    """
+    nonpad = ((toks != 0).astype(jnp.float32) * row_mask).sum()
+    mass = (toks.astype(jnp.float32) * row_mask).sum()
 
     p = len(pattern)
     length = toks.shape[1]
     hits = jnp.ones((toks.shape[0], length - p + 1), jnp.bool_)
     for j, pj in enumerate(pattern):
         hits = hits & (toks[:, j:length - p + 1 + j] == pj)
-    matches = hits.astype(jnp.float32).sum()
+    matches = (hits.astype(jnp.float32) * row_mask).sum()
+    return nonpad, matches, mass
 
+
+def block_stats_kernel(tok_ref, out_ref, *, pattern: tuple, block_rows: int,
+                       n_rows: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[:] = jnp.zeros_like(out_ref)
+
+    toks = tok_ref[:]                          # (block_rows, L) int32
+    rows = i * block_rows + jax.lax.broadcasted_iota(
+        jnp.int32, (block_rows, 1), 0)
+    row_mask = (rows < n_rows).astype(jnp.float32)
+    nonpad, matches, mass = _tile_stats(toks, row_mask, pattern)
     out_ref[0] += nonpad
     out_ref[1] += matches
     out_ref[2] += mass
 
 
 def block_stats_pallas(tokens, pattern: tuple = (17, 23, 5), *,
-                       block_rows: int = 128, interpret: bool = True):
-    """tokens: (N, L) int32 -> stats (3,) float32: [nonpad, matches, mass]."""
+                       block_rows: int = 128, interpret: bool | None = None):
+    """tokens: (N, L) int32 -> stats (3,) float32: [nonpad, matches, mass].
+
+    N need not divide the tile: the final tile is zero-padded and pad rows
+    are masked out of the stats.
+    """
     n, length = tokens.shape
     block_rows = min(block_rows, n)
-    assert n % block_rows == 0
+    pad = (-n) % block_rows
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
     kernel = functools.partial(block_stats_kernel, pattern=tuple(pattern),
-                               block_rows=block_rows)
+                               block_rows=block_rows, n_rows=n)
     return pl.pallas_call(
         kernel,
-        grid=(n // block_rows,),
+        grid=((n + pad) // block_rows,),
         in_specs=[pl.BlockSpec((block_rows, length), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((3,), lambda i: (0,)),
         out_shape=jax.ShapeDtypeStruct((3,), jnp.float32),
-        interpret=interpret,
+        interpret=_resolve_interpret(interpret),
     )(tokens)
+
+
+def block_stats_batched_kernel(len_ref, tok_ref, out_ref, *, pattern: tuple,
+                               block_rows: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[:] = jnp.zeros_like(out_ref)
+
+    toks = tok_ref[0]                          # (block_rows, L) int32
+    rows = j * block_rows + jax.lax.broadcasted_iota(
+        jnp.int32, (block_rows, 1), 0)
+    row_mask = (rows < len_ref[0]).astype(jnp.float32)
+    nonpad, matches, mass = _tile_stats(toks, row_mask, pattern)
+    out_ref[0, 0] += nonpad
+    out_ref[0, 1] += matches
+    out_ref[0, 2] += mass
+
+
+def block_stats_batched_pallas(tokens, lengths=None,
+                               pattern: tuple = (17, 23, 5), *,
+                               block_rows: int = 128,
+                               interpret: bool | None = None):
+    """tokens: (n_blocks, R, L) int32 -> (n_blocks, 3) float32 stats.
+
+    One ``pallas_call`` over a (n_blocks, row_tiles) grid computes every
+    block's [nonpad, matches, mass] in a single dispatch.  ``lengths``
+    (n_blocks,) gives each block's real row count for ragged datasets packed
+    into the common R (rows at or beyond a block's length are masked out);
+    ``None`` means all R rows are real.
+    """
+    n_blocks, r, length = tokens.shape
+    if lengths is None:
+        lengths = jnp.full((n_blocks,), r, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    block_rows = min(block_rows, r)
+    pad = (-r) % block_rows
+    if pad:
+        tokens = jnp.pad(tokens, ((0, 0), (0, pad), (0, 0)))
+    kernel = functools.partial(block_stats_batched_kernel,
+                               pattern=tuple(pattern), block_rows=block_rows)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks, (r + pad) // block_rows),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1, block_rows, length), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 3), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, 3), jnp.float32),
+        interpret=_resolve_interpret(interpret),
+    )(lengths, tokens)

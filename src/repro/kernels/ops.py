@@ -11,11 +11,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.block_stats import block_stats_pallas
+from repro.kernels.block_stats import (block_stats_batched_pallas,
+                                       block_stats_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
-__all__ = ["flash_attention", "ssd_scan", "block_stats", "default_interpret"]
+__all__ = ["flash_attention", "ssd_scan", "block_stats",
+           "block_stats_batched", "default_interpret"]
 
 
 def default_interpret() -> bool:
@@ -48,3 +50,14 @@ def block_stats(tokens, pattern: tuple = (17, 23, 5), *, block_rows: int = 128,
     interpret = default_interpret() if interpret is None else interpret
     return block_stats_pallas(tokens, pattern, block_rows=block_rows,
                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("pattern", "block_rows",
+                                             "interpret"))
+def block_stats_batched(tokens, lengths=None, pattern: tuple = (17, 23, 5), *,
+                        block_rows: int = 128, interpret: bool | None = None):
+    """Whole-dataset stats: (n_blocks, R, L) [+ (n_blocks,) lengths] -> (n_blocks, 3)."""
+    interpret = default_interpret() if interpret is None else interpret
+    return block_stats_batched_pallas(tokens, lengths, pattern,
+                                      block_rows=block_rows,
+                                      interpret=interpret)

@@ -6,7 +6,8 @@ import math
 import jax
 import jax.numpy as jnp
 
-__all__ = ["flash_attention_ref", "ssd_scan_ref", "block_stats_ref"]
+__all__ = ["flash_attention_ref", "ssd_scan_ref", "block_stats_ref",
+           "block_stats_batched_ref"]
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True, swa_window=None):
@@ -67,3 +68,12 @@ def block_stats_ref(tokens, pattern=(17, 23, 5)):
         hits = hits & (toks[:, j:length - p + 1 + j] == pj)
     matches = hits.sum().astype(jnp.float32)
     return jnp.stack([nonpad, matches, mass])
+
+
+def block_stats_batched_ref(tokens, lengths=None, pattern=(17, 23, 5)):
+    """Per-block oracle: one block_stats_ref on each block's valid rows."""
+    n_blocks, r, _ = tokens.shape
+    if lengths is None:
+        lengths = [r] * n_blocks
+    return jnp.stack([block_stats_ref(tokens[b, :int(lengths[b])], pattern)
+                      for b in range(n_blocks)])

@@ -88,3 +88,48 @@ def test_block_stats_sweep(rows, length, br):
     want = ref.block_stats_ref(jnp.asarray(toks), (17, 23, 5))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want))
     assert np.asarray(got)[1] >= rows // 7  # planted matches found
+
+
+@pytest.mark.parametrize("rows,length,br", [(100, 64, 32), (7, 16, 128),
+                                            (257, 48, 64), (130, 32, 128)])
+def test_block_stats_ragged_rows(rows, length, br):
+    """Row counts that do NOT divide the tile: final tile padded + masked."""
+    rng = np.random.default_rng(hash((rows, length, br)) % 2**31)
+    toks = rng.integers(0, 50, (rows, length)).astype(np.int32)
+    for r in range(0, rows, 5):
+        toks[r, :3] = (17, 23, 5)
+    got = ops.block_stats(jnp.asarray(toks), (17, 23, 5), block_rows=br,
+                          interpret=True)
+    want = ref.block_stats_ref(jnp.asarray(toks), (17, 23, 5))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("nb,rmax,length,br", [(12, 96, 40, 32),
+                                               (5, 64, 24, 64),
+                                               (3, 130, 32, 64)])
+def test_block_stats_batched_ragged(nb, rmax, length, br):
+    """One (n_blocks, row_tiles) dispatch == per-block oracle; pattern hits
+    planted in PAD rows must be masked out of the stats."""
+    rng = np.random.default_rng(hash((nb, rmax, length)) % 2**31)
+    lens = rng.integers(1, rmax + 1, nb)
+    toks = np.zeros((nb, rmax, length), np.int32)
+    for b in range(nb):
+        toks[b, :lens[b]] = rng.integers(0, 50, (lens[b], length))
+        toks[b, 0, :3] = (17, 23, 5)
+        toks[b, lens[b]:, :3] = (17, 23, 5)  # poison the padding
+    got = ops.block_stats_batched(jnp.asarray(toks), jnp.asarray(lens),
+                                  (17, 23, 5), block_rows=br, interpret=True)
+    want = ref.block_stats_batched_ref(jnp.asarray(toks), lens, (17, 23, 5))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+    assert np.asarray(got).shape == (nb, 3)
+    assert all(np.asarray(got)[:, 1] >= 1)  # real planted hits survive
+
+
+def test_block_stats_batched_full_blocks():
+    """lengths=None means every row is real."""
+    rng = np.random.default_rng(11)
+    toks = jnp.asarray(rng.integers(0, 50, (6, 64, 32)), jnp.int32)
+    got = ops.block_stats_batched(toks, None, (17, 23, 5), block_rows=32,
+                                  interpret=True)
+    want = ref.block_stats_batched_ref(toks, None, (17, 23, 5))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
