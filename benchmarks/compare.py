@@ -1,0 +1,85 @@
+"""Diff two ``bench.json`` blobs and fail on throughput regressions.
+
+Usage::
+
+    python -m benchmarks.compare OLD.json NEW.json [--threshold 0.2]
+
+Every row (dict) inside every section list that carries a ``blocks_per_s``
+metric is keyed by its section plus identifying fields (n, deadline,
+planner, ...).  A key present in both files whose NEW throughput fell more
+than ``threshold`` below OLD is a regression: they are printed and the
+process exits 1 (CI-friendly).  Keys present in only one file are reported
+but never fail the diff — sections come and go as benchmarks evolve.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+METRIC = "blocks_per_s"
+_ID_FIELDS = ("n", "deadline", "planner", "scenario", "app", "z", "nodes",
+              "sampler_blocks", "kernel_blocks", "token_blocks",
+              "cluster_blocks")
+
+
+def collect(blob: dict) -> dict:
+    """(section, identifying fields) -> blocks_per_s."""
+    out = {}
+    for section, content in blob.items():
+        if not isinstance(content, list):
+            continue
+        for row in content:
+            if not isinstance(row, dict) or METRIC not in row:
+                continue
+            key = (section,) + tuple(
+                (k, str(row[k])) for k in _ID_FIELDS if k in row)
+            out[key] = float(row[METRIC])
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("old")
+    ap.add_argument("new")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="max tolerated fractional throughput drop "
+                         "(default 0.2 = 20%%)")
+    args = ap.parse_args(argv)
+
+    with open(args.old) as f:
+        old = collect(json.load(f))
+    with open(args.new) as f:
+        new = collect(json.load(f))
+
+    shared = sorted(set(old) & set(new))
+    if not shared:
+        print("no comparable rows (need matching sections with "
+              f"'{METRIC}') — nothing to diff")
+        return 0
+    regressions = []
+    for key in shared:
+        o, n = old[key], new[key]
+        change = (n - o) / o if o > 0 else 0.0
+        tag = ""
+        if o > 0 and n < o * (1.0 - args.threshold):
+            regressions.append((key, o, n, change))
+            tag = "  <-- REGRESSION"
+        name = key[0] + "/" + ",".join(f"{k}={v}" for k, v in key[1:])
+        print(f"{name}: {o:,.0f} -> {n:,.0f} blocks/s "
+              f"({change:+.1%}){tag}")
+    for key in sorted(set(old) ^ set(new)):
+        side = "old only" if key in old else "new only"
+        print(f"# {side}: {key[0]}/"
+              + ",".join(f"{k}={v}" for k, v in key[1:]))
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) beyond "
+              f"{args.threshold:.0%} threshold")
+        return 1
+    print(f"\nok: no regression beyond {args.threshold:.0%} "
+          f"across {len(shared)} rows")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,6 +11,11 @@ Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).  Sections:
              blocks: blocks/sec per planner, speedup vs the loop reference
              at 10k, plan-equivalence asserts at small n, batched sampler
              and batched block-stats kernel throughput
+  pipeline — streamed SoA dataset→plan path (repro.pipeline): end-to-end
+             blocks/sec and peak RSS at 10k → 1M blocks (quick: → 100k),
+             per-stage timing breakdown, tight-vs-ample planner ratio,
+             equivalence asserts vs the object path, token-kernel and
+             cluster SoA rows
   cluster  — multi-node planner vs per-node independent Algorithm 1 on
              heterogeneous nodes, plus online re-planning under a mid-run
              slowdown (datasets × apps × node counts × deadline tightness)
@@ -224,6 +229,135 @@ def bench_planner_scale(quick: bool = False):
     return rows
 
 
+def bench_pipeline(quick: bool = False):
+    """Streamed SoA dataset→plan pipeline at 10k → 1M blocks.
+
+    Rows report END-TO-END throughput (synthetic per-record costs → chunked
+    batched sampling → SoA estimates → vectorized planner) with a per-stage
+    breakdown (``est_wall_s`` / ``plan_wall_s``) and the process peak RSS
+    after each scale — the path never materializes per-block Python
+    objects, so memory is bounded by the chunk size plus the SoA
+    accumulators, not the block count.  At 10k blocks every streamed plan
+    is asserted identical to the object-based path on the same estimates
+    (frequencies exact, energies within 1e-9) — the row fails loudly rather
+    than reporting a fast-but-wrong pipeline.  A ratio row compares the
+    tight-deadline planner regime (budget-binding kills: sorted-scan with
+    the lazily-sorted window, no python tail) against the ample regime's
+    pure-array fast path.  A token row streams a real ``BlockDataset``
+    through the batched block-stats pallas kernel (one dispatch per chunk;
+    CPU runs it in interpret mode, so treat its absolute wall as a
+    correctness demo, not kernel speed), and a cluster row feeds the same
+    SoA estimates to ``plan_cluster`` directly.
+    """
+    import resource
+
+    import numpy as np
+
+    from repro.core import plan_dvfs
+    from repro.pipeline import (PipelineConfig, plan_estimates,
+                                stream_estimates, stream_estimates_tokens,
+                                synthetic_cost_chunks)
+
+    def rss_mb() -> float:
+        return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+    rows = []
+    cfg = PipelineConfig()
+    sizes = (10_000, 100_000) if quick else (10_000, 100_000, 1_000_000)
+    plan_bps = {}
+    for n in sizes:
+        t0 = time.perf_counter()
+        est = stream_estimates(
+            synthetic_cost_chunks(n, 64, z=1.0, seed=0,
+                                  chunk_size=cfg.chunk_size), cfg)
+        est_wall = time.perf_counter() - t0
+        total = float(est.total.sum())
+        if n == 10_000:  # equivalence oracle at the smallest scale
+            blocks = est.to_block_arrays().to_blocks()
+            for planner in ("paper", "global"):
+                pcfg = PipelineConfig(planner=planner)
+                for slack in (1.8, 1.2):
+                    pa = plan_estimates(est, total * slack, pcfg)
+                    obj = plan_dvfs(blocks, total * slack, planner=planner)
+                    assert pa.feasible == obj.feasible
+                    for i, b in enumerate(obj.blocks):
+                        assert pa.rel_freq[i] == b.rel_freq and \
+                            abs(pa.pred_energy_j[i] - b.pred_energy_j) \
+                            <= 1e-9, (planner, slack, i)
+        for tag, slack in (("ample", 1.8), ("tight", 1.2)):
+            walls = []
+            for _ in range(2):
+                t0 = time.perf_counter()
+                pa = plan_estimates(est, total * slack, cfg)
+                walls.append(time.perf_counter() - t0)
+            plan_wall = min(walls)
+            e2e = est_wall + plan_wall
+            plan_bps[(n, tag)] = n / plan_wall
+            row = {"n": n, "deadline": tag, "est_wall_s": est_wall,
+                   "plan_wall_s": plan_wall, "e2e_wall_s": e2e,
+                   "blocks_per_s": n / e2e,
+                   "plan_blocks_per_s": n / plan_wall,
+                   "feasible": pa.feasible, "peak_rss_mb": rss_mb()}
+            if n == 10_000:
+                row["equivalent"] = True
+            rows.append(row)
+            derived = (f"blocks_per_s={n / e2e:,.0f};"
+                       f"plan_bps={n / plan_wall:,.0f};"
+                       f"est_s={est_wall:.2f};rss_mb={rss_mb():.0f};"
+                       f"feasible={pa.feasible}")
+            if n == 10_000:
+                derived += ";equiv=object_path"
+            _row(f"pipeline_n{n}_{tag}", e2e * 1e6 / n, derived)
+        del est
+
+    n_big = sizes[-1]
+    ratio = plan_bps[(n_big, "ample")] / plan_bps[(n_big, "tight")]
+    rows.append({"scenario": "tight_vs_ample", "n": n_big,
+                 "ample_plan_bps": plan_bps[(n_big, "ample")],
+                 "tight_plan_bps": plan_bps[(n_big, "tight")],
+                 "ample_over_tight": ratio})
+    _row("pipeline_tight_vs_ample", 0.0,
+         f"n={n_big};ample_over_tight={ratio:.2f}x")
+
+    # token path: BlockDataset -> batched stats kernel -> plan (one pallas
+    # dispatch per chunk; interpret mode on CPU)
+    from repro.data import BlockDataset
+    nb = 48 if quick else 96
+    ds = BlockDataset(n_blocks=nb, records_per_block=128, max_len=48, seed=0)
+    t0 = time.perf_counter()
+    te = stream_estimates_tokens(ds.iter_token_chunks(32), cfg)
+    tok_wall = time.perf_counter() - t0
+    pa = plan_estimates(te, float(te.total.sum()) * 1.3, cfg)
+    rows.append({"token_blocks": nb, "est_wall_s": tok_wall,
+                 "blocks_per_s": nb / tok_wall, "feasible": pa.feasible})
+    _row("pipeline_tokens_kernel", tok_wall * 1e6 / nb,
+         f"blocks_per_s={nb / tok_wall:,.0f};feasible={pa.feasible};"
+         f"dispatches=1_per_chunk")
+
+    # cluster SoA: the same streamed estimates straight into plan_cluster
+    from repro.cluster import NodeSpec, plan_cluster
+    nodes = [NodeSpec(f"n{k}", speed=s)
+             for k, s in enumerate((1.0, 0.8, 1.25))]
+    n_c = 2000
+    est_c = stream_estimates(synthetic_cost_chunks(n_c, 32, seed=1), cfg)
+    deadline = float(est_c.total.sum()) / (0.8 * len(nodes)) * 1.4
+    ba = est_c.to_block_arrays()
+    t0 = time.perf_counter()
+    cpa = plan_cluster(ba, nodes, deadline, assignment="round_robin")
+    clu_wall = time.perf_counter() - t0
+    obj = plan_cluster(ba.to_blocks(), nodes, deadline,
+                       assignment="round_robin")
+    assert abs(cpa.pred_total_energy - obj.pred_total_energy) <= 1e-6, \
+        "cluster SoA diverged from object path"
+    rows.append({"cluster_blocks": n_c, "plan_wall_s": clu_wall,
+                 "blocks_per_s": n_c / clu_wall,
+                 "feasible": cpa.feasible, "equivalent": True})
+    _row("pipeline_cluster_soa", clu_wall * 1e6 / n_c,
+         f"blocks_per_s={n_c / clu_wall:,.0f};feasible={cpa.feasible};"
+         f"equiv=object_path")
+    return rows
+
+
 def bench_cluster():
     """Cluster scenario sweep: datasets (Zipf z) × apps × node counts ×
     deadline tightness.  Every row compares the multi-node planner (LPT +
@@ -389,6 +523,7 @@ def main() -> None:
         "planners": (bench_planners, True),
         "planner_scale": (lambda: bench_planner_scale(quick=args.quick),
                           False),
+        "pipeline": (lambda: bench_pipeline(quick=args.quick), False),
         "cluster": (bench_cluster, False),
         "roofline": (bench_roofline, False),
         "train": (bench_train, False),

@@ -62,14 +62,18 @@ power models learned from counters.
 """
 from repro.cluster.controller import OnlineReplanner
 from repro.cluster.node import NodeSpec
-from repro.cluster.planner import (ClusterPlan, NodePlan, assign_blocks,
-                                   plan_cluster, plan_independent)
+from repro.cluster.planner import (ClusterPlan, ClusterPlanArrays, NodePlan,
+                                   NodePlanArrays, assign_block_arrays,
+                                   assign_blocks, plan_cluster,
+                                   plan_cluster_arrays, plan_independent)
 from repro.cluster.sim import (ClusterReport, NodeReport, SlowdownEvent,
                                simulate_cluster)
 
 __all__ = [
     "NodeSpec",
     "ClusterPlan", "NodePlan", "assign_blocks", "plan_cluster",
+    "ClusterPlanArrays", "NodePlanArrays", "assign_block_arrays",
+    "plan_cluster_arrays",
     "plan_independent",
     "OnlineReplanner",
     "ClusterReport", "NodeReport", "SlowdownEvent", "simulate_cluster",

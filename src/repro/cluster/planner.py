@@ -34,13 +34,16 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.scheduler import (BlockInfo, BlockPlan, _make_plans,
-                                  _run_downclock_tables, block_time_table,
-                                  busy_energy_table, plan_dvfs)
+from repro.core.scheduler import (BlockInfo, BlockPlan,
+                                  _run_downclock_tables,
+                                  block_time_table_arrays, busy_energy_table,
+                                  plan_dvfs)
+from repro.core.soa import BlockArrays, PlanArrays
 from repro.cluster.node import NodeSpec
 
-__all__ = ["NodePlan", "ClusterPlan", "assign_blocks", "plan_cluster",
-           "plan_independent"]
+__all__ = ["NodePlan", "ClusterPlan", "NodePlanArrays", "ClusterPlanArrays",
+           "assign_blocks", "assign_block_arrays", "plan_cluster",
+           "plan_cluster_arrays", "plan_independent"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,41 +157,143 @@ def assign_blocks(
     return groups
 
 
-def plan_cluster(
-    blocks: Sequence[BlockInfo],
+@dataclasses.dataclass(frozen=True)
+class NodePlanArrays:
+    """SoA ``NodePlan``: one node's share of a cluster plan, zero per-block
+    objects (``plan`` holds index/rel_freq/time/energy arrays)."""
+
+    node: NodeSpec
+    plan: PlanArrays
+
+    @functools.cached_property
+    def pred_finish_s(self) -> float:
+        # python sum over the same block order as NodePlan.pred_finish_s,
+        # so auto-assignment tie-breaks cannot diverge from the object path
+        return sum(self.plan.pred_time_s.tolist())
+
+    @functools.cached_property
+    def pred_energy_j(self) -> float:
+        return sum(self.plan.pred_energy_j.tolist())
+
+    def to_node_plan(self) -> NodePlan:
+        return NodePlan(self.node, self.plan.to_blocks())
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterPlanArrays:
+    """SoA ``ClusterPlan`` — what ``plan_cluster`` returns for ``BlockArrays``
+    input.  ``to_cluster_plan()`` materializes the object form on demand."""
+
+    planner: str
+    deadline_s: float
+    node_plans: tuple  # of NodePlanArrays
+    feasible: bool
+
+    @functools.cached_property
+    def pred_makespan_s(self) -> float:
+        return max((np_.pred_finish_s for np_ in self.node_plans), default=0.0)
+
+    @functools.cached_property
+    def pred_total_energy(self) -> float:
+        return sum(np_.pred_energy_j for np_ in self.node_plans)
+
+    def assignment(self) -> dict:
+        """block index -> node name."""
+        out = {}
+        for np_ in self.node_plans:
+            for i in np_.plan.index.tolist():
+                out[i] = np_.node.name
+        return out
+
+    def to_cluster_plan(self) -> ClusterPlan:
+        return ClusterPlan(self.planner, self.deadline_s,
+                           tuple(np_.to_node_plan() for np_ in self.node_plans),
+                           self.feasible)
+
+
+def assign_block_arrays(
+    ba: BlockArrays,
+    nodes: Sequence[NodeSpec],
+    *,
+    strategy="lpt",
+    deadline_s: float | None = None,
+) -> list:
+    """``assign_blocks`` over SoA input; returns per-node POSITION arrays.
+
+    Group contents and order are identical to what ``assign_blocks`` produces
+    on the corresponding ``BlockInfo`` list (same sort keys, same FP finish
+    times, same tie rules), so the two paths plan the same splits.
+    ``round_robin`` and explicit assignments are pure array ops; ``lpt`` /
+    ``pack`` keep the reference's sequential placement loop (exact earliest-
+    finish semantics) over scalars — prefer ``round_robin`` or an explicit
+    assignment in the million-block regime.
+    """
+    n = len(ba)
+    est = ba.est_time_fmax
+    if isinstance(strategy, str):
+        if strategy == "round_robin":
+            return [np.arange(k, n, len(nodes)) for k in range(len(nodes))]
+        if strategy in ("lpt", "pack"):
+            if strategy == "pack" and deadline_s is None:
+                raise ValueError("pack assignment needs deadline_s")
+            order = np.lexsort((ba.index, -est))
+            groups = [[] for _ in nodes]
+            loads = [0.0] * len(nodes)
+            by_speed = sorted(range(len(nodes)),
+                              key=lambda k: (-nodes[k].speed, k))
+            est_list = est.tolist()
+            for p in order.tolist():
+                e = est_list[p]
+                k = None
+                if strategy == "pack":
+                    for cand in by_speed:
+                        if loads[cand] + e / nodes[cand].speed \
+                                <= deadline_s + 1e-9:
+                            k = cand
+                            break
+                if k is None:  # lpt rule (also pack's overloaded fallback)
+                    k = min(range(len(nodes)),
+                            key=lambda j: (loads[j] + e / nodes[j].speed, j))
+                groups[k].append(p)
+                loads[k] += e / nodes[k].speed
+            return [np.asarray(g, dtype=np.int64) for g in groups]
+        raise ValueError(f"unknown assignment strategy: {strategy}")
+    idxs = np.asarray(list(strategy), dtype=np.int64)
+    if len(idxs) != n:
+        raise ValueError("explicit assignment must name a node per block")
+    return [np.nonzero(idxs == k)[0] for k in range(len(nodes))]
+
+
+def plan_cluster_arrays(
+    ba: BlockArrays,
     nodes: Sequence[NodeSpec],
     deadline_s: float,
     *,
     assignment="auto",
     error_margin: float = 0.05,
-) -> ClusterPlan:
-    """Assign blocks to nodes and greedily down-clock across the cluster.
+) -> ClusterPlanArrays:
+    """``plan_cluster`` over SoA input — the streamed-pipeline entry.
 
-    ``assignment="auto"`` plans every candidate strategy (``lpt``, ``pack``,
-    ``round_robin``) and keeps the feasible plan with the lowest predicted
-    energy (falling back to the smallest makespan when none is feasible) —
-    deterministic, and by construction never worse than planning on the
-    baseline's own round-robin split.
+    Accepts the estimates exactly as ``repro.pipeline`` streams them (a
+    ``BlockArrays``), never materializes per-block objects, and produces the
+    same assignment, frequencies, and energies as the object path (enforced
+    by ``tests/test_pipeline.py``).
     """
     if not nodes:
         raise ValueError("need at least one node")
     if isinstance(assignment, str) and assignment == "auto":
-        candidates = [plan_cluster(blocks, nodes, deadline_s, assignment=s,
-                                   error_margin=error_margin)
+        candidates = [plan_cluster_arrays(ba, nodes, deadline_s, assignment=s,
+                                          error_margin=error_margin)
                       for s in ("lpt", "pack", "round_robin")]
         feasible = [p for p in candidates if p.feasible]
         if feasible:
             return min(feasible, key=lambda p: p.pred_total_energy)
         return min(candidates, key=lambda p: p.pred_makespan_s)
     budget = deadline_s * (1.0 - error_margin)
-    groups = assign_blocks(blocks, nodes, strategy=assignment,
-                           deadline_s=budget)
+    groups = assign_block_arrays(ba, nodes, strategy=assignment,
+                                 deadline_s=budget)
 
-    # one flat item per (node, block), node-major; each node's time/energy
-    # tables are built in one vectorized pass on its own ladder/power/speed,
-    # then stacked into (n_items, max_states) arrays (+inf padding beyond a
-    # node's ladder) so the shared table-driven greedy runs one heap across
-    # the whole cluster with per-NODE budgets gating each step
+    # identical table stacking to plan_cluster, built from array slices
     s_max = max(len(nd.ladder.states) for nd in nodes)
     n_items = sum(len(g) for g in groups)
     times_tab = np.full((n_items, s_max), np.inf)
@@ -199,17 +304,19 @@ def plan_cluster(
     group = np.empty(n_items, dtype=np.int64)
     group_total = np.zeros(len(nodes))
     lo = 0
-    for k, (nd, grp) in enumerate(zip(nodes, groups)):
-        hi = lo + len(grp)
+    subsets = []
+    for k, (nd, g) in enumerate(zip(nodes, groups)):
+        sub = ba.select(g)
+        subsets.append(sub)
+        hi = lo + len(g)
         states = nd.ladder.states
-        utils = np.fromiter((b.util for b in grp), np.float64, count=len(grp))
-        tab = block_time_table(grp, states) / nd.speed
+        tab = block_time_table_arrays(sub, states) / nd.speed
         times_tab[lo:hi, :len(states)] = tab
         energies_tab[lo:hi, :len(states)] = busy_energy_table(
-            tab, utils, states, nd.power)
-        t1 = block_time_table(grp, (1.0,))[:, 0] / nd.speed
+            tab, sub.util, states, nd.power)
+        t1 = block_time_table_arrays(sub, (1.0,))[:, 0] / nd.speed
         times[lo:hi] = t1
-        energies[lo:hi] = busy_energy_table(t1[:, None], utils, (1.0,),
+        energies[lo:hi] = busy_energy_table(t1[:, None], sub.util, (1.0,),
                                             nd.power)[:, 0]
         pos[lo:hi] = len(states) - 1
         group[lo:hi] = k
@@ -222,16 +329,50 @@ def plan_cluster(
 
     node_plans = []
     lo = 0
-    for nd, grp in zip(nodes, groups):
-        hi = lo + len(grp)
-        slot = deadline_s / max(len(grp), 1)
-        bps = _make_plans(grp, slot,
-                          (nd.ladder.states[p] for p in pos[lo:hi].tolist()),
-                          times[lo:hi].tolist(), energies[lo:hi].tolist())
-        node_plans.append(NodePlan(nd, bps))
+    for k, (nd, sub) in enumerate(zip(nodes, subsets)):
+        hi = lo + len(sub)
+        slot = deadline_s / max(len(sub), 1)
+        states_arr = np.asarray(nd.ladder.states, dtype=np.float64)
+        pa = PlanArrays("cluster", deadline_s, slot, sub.index,
+                        states_arr[pos[lo:hi]], times[lo:hi].copy(),
+                        energies[lo:hi].copy(),
+                        bool(group_total[k] <= deadline_s + 1e-9))
+        node_plans.append(NodePlanArrays(nd, pa))
         lo = hi
     feasible = all(t <= deadline_s + 1e-9 for t in group_total.tolist())
-    return ClusterPlan("cluster", deadline_s, tuple(node_plans), feasible)
+    return ClusterPlanArrays("cluster", deadline_s, tuple(node_plans),
+                             feasible)
+
+
+def plan_cluster(
+    blocks: Sequence[BlockInfo] | BlockArrays,
+    nodes: Sequence[NodeSpec],
+    deadline_s: float,
+    *,
+    assignment="auto",
+    error_margin: float = 0.05,
+) -> "ClusterPlan | ClusterPlanArrays":
+    """Assign blocks to nodes and greedily down-clock across the cluster.
+
+    ``assignment="auto"`` plans every candidate strategy (``lpt``, ``pack``,
+    ``round_robin``) and keeps the feasible plan with the lowest predicted
+    energy (falling back to the smallest makespan when none is feasible) —
+    deterministic, and by construction never worse than planning on the
+    baseline's own round-robin split.
+
+    SoA path: passing a ``BlockArrays`` (e.g. estimates streamed by
+    ``repro.pipeline``) returns a ``ClusterPlanArrays`` instead — same
+    plans, zero per-block Python objects.
+    """
+    if isinstance(blocks, BlockArrays):
+        return plan_cluster_arrays(blocks, nodes, deadline_s,
+                                   assignment=assignment,
+                                   error_margin=error_margin)
+    # the object path IS the SoA path (same assignment, same stacked tables,
+    # same greedy) — a thin wrapper, so the two cannot diverge
+    return plan_cluster_arrays(BlockArrays.from_blocks(blocks), nodes,
+                               deadline_s, assignment=assignment,
+                               error_margin=error_margin).to_cluster_plan()
 
 
 def plan_cluster_reference(

@@ -9,11 +9,15 @@ from repro.core.energy import (CPU_PAPER_POWER, DEFAULT_LADDER, TPU_V5E_POWER,
 from repro.core.estimator import (V5E, ChipSpec, CostModel, RooflineTerms,
                                   RooflineTimeModel)
 from repro.core.sampling import (BlockEstimate, required_sample_size,
-                                 sample_block_cost, sample_blocks)
+                                 sample_block_cost, sample_blocks,
+                                 sample_blocks_soa)
 from repro.core.scheduler import (BlockInfo, BlockPlan, ExecutionReport,
                                   SchedulePlan, block_time, block_time_table,
-                                  busy_energy_table, plan_dvfs, plan_dvo,
-                                  simulate)
+                                  block_time_table_arrays, busy_energy_table,
+                                  plan_dvfs, plan_dvfs_arrays, plan_dvo,
+                                  plan_dvo_arrays, simulate)
+from repro.core.soa import (BlockArrays, EstimateArrays, PlanArrays,
+                            RooflineArrays)
 from repro.core.variety import (VarietyStats, variety_stats, zipf_block_sizes,
                                 zipf_weights)
 
@@ -22,9 +26,12 @@ __all__ = [
     "PowerModel",
     "V5E", "ChipSpec", "CostModel", "RooflineTerms", "RooflineTimeModel",
     "BlockEstimate", "required_sample_size", "sample_block_cost",
-    "sample_blocks",
+    "sample_blocks", "sample_blocks_soa",
     "BlockInfo", "BlockPlan", "ExecutionReport", "SchedulePlan",
-    "block_time", "block_time_table", "busy_energy_table",
-    "plan_dvfs", "plan_dvo", "simulate",
+    "BlockArrays", "EstimateArrays", "PlanArrays", "RooflineArrays",
+    "block_time", "block_time_table", "block_time_table_arrays",
+    "busy_energy_table",
+    "plan_dvfs", "plan_dvfs_arrays", "plan_dvo", "plan_dvo_arrays",
+    "simulate",
     "VarietyStats", "variety_stats", "zipf_block_sizes", "zipf_weights",
 ]

@@ -28,8 +28,18 @@ All planners run off per-block ``(n_blocks, n_states)`` time/energy tables
 arrays; the shared ΔE/Δt greedy (``_run_downclock_tables``) and the paper
 planner's repair pass are heap-driven table lookups, so planning scales to
 100k+ blocks (see ``benchmarks/run.py`` section ``planner_scale``).  The
-original loop implementations live in ``repro.core._reference`` as
-equivalence oracles: same frequencies, energies within 1e-9.
+single-budget tight-deadline regime (budget-binding kills dominating) is a
+fully array-level round loop — see ``_downclock_sorted_scan`` — with no
+per-step python tail.  The original loop implementations live in
+``repro.core._reference`` as equivalence oracles: same frequencies, energies
+within 1e-9.
+
+SoA path
+========
+``plan_dvfs_arrays`` / ``plan_dvo_arrays`` are the same planners over
+``repro.core.soa.BlockArrays`` returning ``PlanArrays`` — zero per-block
+Python objects end to end.  ``plan_dvfs`` / ``plan_dvo`` are thin object
+wrappers over them, so the two paths cannot diverge.
 """
 from __future__ import annotations
 
@@ -42,11 +52,13 @@ import numpy as np
 
 from repro.core.energy import DEFAULT_LADDER, FrequencyLadder, PowerModel, TPU_V5E_POWER
 from repro.core.estimator import RooflineTimeModel
+from repro.core.soa import BlockArrays, PlanArrays
 
 __all__ = [
     "BlockInfo", "BlockPlan", "SchedulePlan", "ExecutionReport",
-    "block_time_table", "busy_energy_table",
-    "plan_dvfs", "plan_dvo", "simulate",
+    "block_time_table", "block_time_table_arrays", "busy_energy_table",
+    "plan_dvfs", "plan_dvfs_arrays", "plan_dvo", "plan_dvo_arrays",
+    "simulate",
 ]
 
 
@@ -152,26 +164,23 @@ def _block_energy(power: PowerModel, block: BlockInfo, t: float,
 
 # --- vectorized planning tables --------------------------------------------
 
-def block_time_table(blocks: Sequence[BlockInfo], states) -> np.ndarray:
-    """Per-block processing times: ``out[i, j] == block_time(blocks[i], states[j])``.
+def block_time_table_arrays(ba: BlockArrays, states) -> np.ndarray:
+    """Per-block processing times from SoA inputs (see ``block_time_table``).
 
-    One vectorized pass replaces n·s ``block_time`` calls; every arithmetic
-    step mirrors the scalar code op-for-op so table entries are bitwise
-    identical to what the loop reference computes.
+    Every arithmetic step mirrors the scalar ``block_time`` op-for-op so
+    table entries are bitwise identical to what the loop reference computes.
     """
-    n = len(blocks)
     states_arr = np.asarray(states, dtype=np.float64)
     f_safe = np.maximum(states_arr, 1e-6)
-    est = np.fromiter((b.est_time_fmax for b in blocks), np.float64, count=n)
+    est = ba.est_time_fmax
     times = est[:, None] / f_safe[None, :]
 
-    roof = [i for i, b in enumerate(blocks) if b.roofline is not None]
-    if roof:
-        terms = [blocks[i].roofline.terms for i in roof]
-        t_comp = np.fromiter((t.t_comp for t in terms), np.float64, len(roof))
-        t_mem = np.fromiter((t.t_mem for t in terms), np.float64, len(roof))
-        t_coll = np.fromiter((t.t_coll for t in terms), np.float64, len(roof))
-        t_fixed = np.fromiter((t.t_fixed for t in terms), np.float64, len(roof))
+    if ba.roofline is not None and ba.roofline.has.any():
+        roof = ba.roofline.has
+        t_comp = ba.roofline.t_comp[roof]
+        t_mem = ba.roofline.t_mem[roof]
+        t_coll = ba.roofline.t_coll[roof]
+        t_fixed = ba.roofline.t_fixed[roof]
         time_at_fmax = np.maximum(np.maximum(t_comp, t_mem), t_coll) + t_fixed
         scale = est[roof] / np.maximum(time_at_fmax, 1e-12)
         shaped = np.maximum(
@@ -179,6 +188,15 @@ def block_time_table(blocks: Sequence[BlockInfo], states) -> np.ndarray:
             t_coll[:, None]) + t_fixed[:, None]
         times[roof] = shaped * scale[:, None]
     return times
+
+
+def block_time_table(blocks: Sequence[BlockInfo], states) -> np.ndarray:
+    """Per-block processing times: ``out[i, j] == block_time(blocks[i], states[j])``.
+
+    One vectorized pass replaces n·s ``block_time`` calls (object wrapper
+    over ``block_time_table_arrays``).
+    """
+    return block_time_table_arrays(BlockArrays.from_blocks(blocks), states)
 
 
 def busy_energy_table(times_tab: np.ndarray, utils: np.ndarray, states,
@@ -196,19 +214,15 @@ def busy_energy_table(times_tab: np.ndarray, utils: np.ndarray, states,
     return times_tab * ptab
 
 
-def _block_utils(blocks: Sequence[BlockInfo]) -> np.ndarray:
-    return np.fromiter((b.util for b in blocks), np.float64, count=len(blocks))
-
-
-def _make_plans(blocks, slot: float, freqs, times, energies) -> tuple:
+def _make_plans(indices, slot: float, freqs, times, energies) -> tuple:
     """Bulk-construct BlockPlans, bypassing the frozen-dataclass __init__
     (one object.__setattr__ per field — ~3x the cost of the plan math at
     100k blocks).  Field semantics identical to BlockPlan(...)."""
     new = object.__new__
     out = []
-    for b, f, t, e in zip(blocks, freqs, times, energies):
+    for i, f, t, e in zip(indices, freqs, times, energies):
         bp = new(BlockPlan)
-        bp.__dict__.update(index=b.index, slot_s=slot, rel_freq=f,
+        bp.__dict__.update(index=i, slot_s=slot, rel_freq=f,
                            pred_time_s=t, pred_energy_j=e)
         out.append(bp)
     return tuple(out)
@@ -243,13 +257,38 @@ def _downclock_sorted_scan(times_tab: np.ndarray, energies_tab: np.ndarray,
     runtime), the heap's pop order IS the global sort order of all chain
     steps by ``(key, item, chain position)``: an item's next step only enters
     the heap after its previous one, and monotone keys mean it can never
-    overtake.  So the greedy becomes: sort all candidate steps once, accept
-    the longest prefix whose running total fits the budget outright (no
-    rejections can occur inside it), then finish the borderline tail with a
-    short sequential scan where a rejected step retires its item — exactly
-    the heap's no-retry semantics.  Mutates state and returns True on
-    success; returns False (state untouched) for non-monotone keys, leaving
-    the heap path to handle them.
+    overtake.  So the greedy becomes a scan of the sorted steps where a
+    rejected step retires its item — exactly the heap's no-retry semantics.
+
+    The scan itself is a round loop of whole-array passes (no per-step
+    python), built on three exact facts about the sequential process:
+
+      * the running total never decreases, so any step over budget at the
+        CURRENT total is rejected whenever the scan reaches it, and a
+        rejected step's sole effect is retiring its item — the step and its
+        chain suffix can be dropped the moment it first overflows (the
+        bucketed-Δt prune: one threshold, ``budget - total``, splits the
+        pending steps into retired / still-eligible in a single pass);
+      * WHEN a rejection retires an item is unobservable: the retired item's
+        pending step can never be accepted later (the total only grows), and
+        its chain suffix is gated behind that step — so rejections need no
+        ordering at all, only accepts do;
+      * between two rejections every step is accepted, so a whole stretch
+        resolves as one cumsum seeded with the running total (the cumsum's
+        left-to-right accumulation reproduces the reference's ``total += dt``
+        to the last ulp).
+
+    Because only accepted stretches are order-sensitive, the sort itself is
+    lazy: an incrementally-extended sorted WINDOW of smallest-key steps
+    (ties never straddle the boundary, so stable in-window order equals the
+    global sort order) is scanned round by round — prune at the current
+    total, accept one maximal cumsum stretch, compact — and the unsorted
+    pool is only sorted chunk by chunk as the scan actually reaches it.  In
+    the kill-dominated tight-deadline regime most steps retire via the
+    threshold prune without ever being sorted, which is what keeps this
+    regime within shouting distance of the ample one.  Mutates state and
+    returns True on success; returns False (state untouched) for
+    non-monotone keys, leaving the heap path to handle them.
     """
     n = len(pos)
     counts = pos - stop
@@ -259,102 +298,98 @@ def _downclock_sorted_scan(times_tab: np.ndarray, energies_tab: np.ndarray,
     starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
     stepno = np.arange(len(idx)) - np.repeat(starts, counts)
     levels = pos[idx] - 1 - stepno
-    t_lo = times_tab[idx, levels]
-    e_lo = energies_tab[idx, levels]
+    s = times_tab.shape[1]
+    # per-step dt/de off adjacent table columns: one flat gather from the
+    # (n, s-1) diff tables instead of four from the raw tables.  The diffs
+    # are the same two-operand subtractions the scalar path performs, so
+    # values are bitwise identical.
+    flat = idx * (s - 1) + levels
+    dt = (times_tab[:, :s - 1] - times_tab[:, 1:]).ravel().take(flat)
+    de = (energies_tab[:, 1:] - energies_tab[:, :s - 1]).ravel().take(flat)
     # first step of each chain prices off the item's exact initial values
     # (the ladder top may not be exactly 1.0); later steps off the table
-    first = stepno == 0
-    t_hi = np.where(first, times[idx], times_tab[idx, levels + 1])
-    e_hi = np.where(first, energies[idx], energies_tab[idx, levels + 1])
-    dt = t_lo - t_hi
-    de = e_hi - e_lo
-    if not np.all(de[first] > 1e-15):
+    fpos = starts[counts > 0]
+    fitem = idx[fpos]
+    flev = levels[fpos]
+    dt[fpos] = times_tab[fitem, flev] - times[fitem]
+    de_first = energies[fitem] - energies_tab[fitem, flev]
+    de[fpos] = de_first
+    if not np.all(de_first > 1e-15):
         return False  # chain gate priced differently off-table: rare, punt
     keys = -de / np.maximum(dt, 1e-12)
-    same = idx[1:] == idx[:-1]
-    if not np.all(keys[1:][same] >= keys[:-1][same]):
+    nondecr = keys[1:] >= keys[:-1]
+    if not np.all(nondecr | (idx[1:] != idx[:-1])):
         return False  # non-monotone chain: heap order != sort order
 
-    order = np.lexsort((-levels, idx, keys))
-    # running totals with the reference's exact accumulation order
-    totals = np.cumsum(np.concatenate((group_total, dt[order])))[1:]
-    cut = int(np.searchsorted(totals, group_budget[0] + 1e-9, side="right"))
-    acc = order[:cut]
-    final = pos.copy()
-    np.minimum.at(final, idx[acc], levels[acc])
-    if cut:
-        group_total[0] = totals[cut - 1]
-
-    # borderline tail: budget nearly spent, but smaller steps may still fit
     total = float(group_total[0])
     budget = float(group_budget[0])
-    tail = order[cut:]
-    ti, tl, td = idx[tail], levels[tail], dt[tail]
-    if len(tail):
-        # prune steps that can only be rejected: the running total never
-        # shrinks, so total+dt > budget+1e-9 already HERE means the step is
-        # rejected whenever the scan reaches it — and a rejected step's sole
-        # effect is retiring its item, so the step and everything after it
-        # in that item's chain can be dropped up front
-        killer = total + td > budget + 1e-9
-        by_item = np.lexsort((np.arange(len(ti)), ti))
-        gi = ti[by_item]
-        gk = killer[by_item]
-        seg_starts = np.nonzero(np.concatenate(([True], gi[1:] != gi[:-1])))[0]
-        cums = np.cumsum(gk)
-        seg_len = np.diff(np.concatenate((seg_starts, [len(gk)])))
-        base = np.repeat(cums[seg_starts] - gk[seg_starts], seg_len)
-        keep = np.empty(len(gk), dtype=bool)
-        keep[by_item] = cums - base == 0  # nothing killed up to & incl. self
-        ti, tl, td = ti[keep], tl[keep], td[keep]
-        tail = tail[keep]
-    alive = np.ones(n, dtype=bool)
-    accepted = np.zeros(len(tail), dtype=bool)
-    # rounds: within one round no item dies until the first over-budget step,
-    # so the accept/reject outcome of the whole stretch up to it is a cumsum
-    # (dead items' steps contribute +0.0 — bitwise-neutral for dt >= 0, so
-    # the running total matches the reference's skip-the-dead accumulation).
-    # Each round retires exactly one item; kill-heavy tails fall back to the
-    # exact sequential scan after a few rounds (rounds only pay off when the
-    # tail is accept-heavy).
-    start, rounds = 0, 0
-    while start < len(tail) and rounds < 8:
-        rounds += 1
-        valid = alive[ti[start:]]
-        # seed the cumsum with the running total so the accumulation order
-        # (and hence every last-ulp) matches the reference's `total += dt`
-        tot = np.cumsum(np.concatenate(
-            ([total], np.where(valid, td[start:], 0.0))))[1:]
-        viol = np.nonzero(valid & (tot > budget + 1e-9))[0]
-        if len(viol) == 0:
-            accepted[start:] = valid
-            if np.any(valid):
-                total = float(tot[-1])
-            start = len(tail)
-            break
-        r = int(viol[0])
-        accepted[start:start + r] = valid[:r]
-        if r:
-            total = float(tot[r - 1])
-        alive[ti[start + r]] = False
-        start += r + 1
-    if start < len(tail):  # round cap hit: finish with the sequential scan
-        fin = final.copy()
-        np.minimum.at(fin, ti[accepted], tl[accepted])
-        ff = fin.tolist()
-        dd = (~alive).tolist()
-        for j in range(start, len(tail)):
-            i = ti[j]
-            if dd[i] or tl[j] != ff[i] - 1:
-                continue
-            if total + td[j] <= budget + 1e-9:
-                ff[i] = tl[j]
-                total += td[j]
+    final = pos.copy()
+    cut = np.full(n, -1, dtype=np.int64)  # highest retired level per item
+
+    # pop order == sort by (key, item, chain position): the steps sit
+    # item-major with levels descending, so a STABLE sort by key alone
+    # leaves equal-key runs in exactly that (item, chain position) order.
+    # The sort is windowed: only steps the scan actually reaches get sorted.
+    # Initial window ~ enough average-sized steps to cross the budget.
+    m = len(keys)
+    mean_dt = float(dt.mean())
+    slack = budget - total
+    w0 = m if mean_dt <= 0 else int(min(m, max(4096, 1.5 * slack / mean_dt)))
+    pi, pl, pd, pk = idx, levels, dt, keys  # pool, original (tie) order
+    wi = np.empty(0, dtype=pi.dtype)
+    wl = np.empty(0, dtype=pl.dtype)
+    wd = np.empty(0)
+    chunk = max(w0, 1)
+    while True:
+        if len(wi) == 0:
+            if len(pi) == 0:
+                break
+            kth = min(chunk, len(pi)) - 1
+            if kth == len(pi) - 1:  # chunk swallows the pool: take it whole
+                ci, cl, cd, ck = pi, pl, pd, pk
+                pi = pi[:0]
+                pl, pd, pk = pl[:0], pd[:0], pk[:0]
             else:
-                dd[i] = True
-        final = np.asarray(ff)
-    else:
-        np.minimum.at(final, ti[accepted], tl[accepted])
+                bound = np.partition(pk, kth)[kth]
+                take = pk <= bound  # tie-inclusive: ties never straddle
+                ci, cl, cd, ck = pi[take], pl[take], pd[take], pk[take]
+                rest = ~take
+                pi, pl, pd, pk = pi[rest], pl[rest], pd[rest], pk[rest]
+            chunk *= 2
+            live = cl > cut[ci]  # retired items' chain suffixes never run
+            if not live.all():
+                ci, cl, cd = ci[live], cl[live], cd[live]
+                ck = ck[live]
+            # pre-sort prune: in the tight regime most of a late chunk is
+            # already over budget — retire those before paying the sort
+            killer = total + cd > budget + 1e-9
+            if killer.any():
+                np.maximum.at(cut, ci[killer], cl[killer])
+                live = cl > cut[ci]
+                ci, cl, cd = ci[live], cl[live], cd[live]
+                ck = ck[live]
+            if len(ci) == 0:
+                continue
+            o = np.argsort(ck, kind="stable")
+            wi, wl, wd = ci[o], cl[o], cd[o]
+        # prune: every step over budget at the current total is rejected
+        # whenever reached; rejection retires its item, so the step and the
+        # chain levels at or below it drop out in one threshold pass
+        killer = total + wd > budget + 1e-9
+        if killer.any():
+            np.maximum.at(cut, wi[killer], wl[killer])
+            keep = wl > cut[wi]
+            wi, wl, wd = wi[keep], wl[keep], wd[keep]
+            if len(wi) == 0:
+                continue
+        # accept stretch: cumsum seeded with the running total, stop at the
+        # first step pushing past the budget (post-prune the window head
+        # always fits, so every pass accepts at least one step)
+        tot = np.cumsum(np.concatenate(([total], wd)))[1:]
+        v = int(np.searchsorted(tot, budget + 1e-9, side="right"))
+        np.minimum.at(final, wi[:v], wl[:v])
+        total = float(tot[v - 1]) if v else total
+        wi, wl, wd = wi[v:], wl[v:], wd[v:]
     group_total[0] = total
     moved = final < pos
     rows = np.arange(n)
@@ -441,8 +476,8 @@ def _run_downclock_tables(times_tab: np.ndarray, energies_tab: np.ndarray,
                                       target - 1, t2, e2, t2 - t_lo_i))
 
 
-def plan_dvfs(
-    blocks: Sequence[BlockInfo],
+def plan_dvfs_arrays(
+    ba: BlockArrays,
     deadline_s: float,
     *,
     planner: str = "paper",
@@ -450,16 +485,19 @@ def plan_dvfs(
     power: PowerModel = TPU_V5E_POWER,
     error_margin: float = 0.05,
     adaptive_margin: bool = False,
-) -> SchedulePlan:
-    """Build a frequency plan for ``blocks`` under ``deadline_s``.
+) -> PlanArrays:
+    """``plan_dvfs`` over SoA inputs: ``BlockArrays`` in, ``PlanArrays`` out.
 
-    ``error_margin`` reserves a fraction of the budget (paper Fig. 5's "reserved
-    area").  With ``adaptive_margin`` the reserve becomes max(error_margin, block CI
-    half-width): sampling uncertainty drives the reserve.
+    No per-block Python objects are created at any point — this is the
+    streamed-pipeline planner entry (``repro.pipeline``).  ``plan_dvfs`` is a
+    thin wrapper over this function, so the two paths produce identical
+    plans by construction.
     """
-    n = len(blocks)
+    n = len(ba)
     if n == 0:
-        return SchedulePlan(planner, deadline_s, (), True)
+        e = np.zeros(0)
+        return PlanArrays(planner, deadline_s, deadline_s, ba.index,
+                          e, e.copy(), e.copy(), True)
     if planner not in ("paper", "global", "slack_pool", "roofline"):
         raise ValueError(f"unknown planner: {planner}")
     if planner == "slack_pool":  # historical alias
@@ -467,10 +505,11 @@ def plan_dvfs(
 
     slot = deadline_s / n  # Algorithm 1 line 3: equal time slots
     states = ladder.states
+    states_arr = np.asarray(states, dtype=np.float64)
     s = len(states)
     rows = np.arange(n)
-    utils = _block_utils(blocks)
-    times_tab = block_time_table(blocks, states)
+    utils = ba.util
+    times_tab = block_time_table_arrays(ba, states)
     energies_tab = busy_energy_table(times_tab, utils, states, power)
 
     if planner == "paper":
@@ -479,9 +518,7 @@ def plan_dvfs(
         # the lowest state within 1e-15 of the feasible energy minimum.  A
         # block that overflows its slot even at f_max runs at f_max.
         if adaptive_margin:
-            hw = np.fromiter((b.est_rel_halfwidth for b in blocks),
-                             np.float64, count=n)
-            margins = np.maximum(error_margin, hw)
+            margins = np.maximum(error_margin, ba.est_rel_halfwidth)
         else:
             margins = np.full(n, error_margin)
         budgets = slot * (1.0 - margins)
@@ -525,10 +562,9 @@ def plan_dvfs(
                     e2 = float(energies_tab[i, tgt + 1])
                     rate2 = (t_hi_i - t2) / max(e2 - e_hi_i, 1e-12)
                     heapq.heappush(heap, (-rate2, i, tgt + 1, t2, e2))
-        plans = _make_plans(blocks, slot, (states[p] for p in pos.tolist()),
-                            times.tolist(), energies.tolist())
         feasible = bool(total_t <= deadline_s + 1e-9)
-        return SchedulePlan("paper", deadline_s, plans, feasible)
+        return PlanArrays("paper", deadline_s, slot, ba.index,
+                          states_arr[pos], times, energies, feasible)
 
     # --- global greedy ("global" / "roofline") ------------------------------
     # state: per-block ladder position (start at f_max); lower the block whose
@@ -536,17 +572,57 @@ def plan_dvfs(
     # deadline*(1-margin).  Initial times/energies at rel_freq=1.0 exactly
     # (the ladder top may sit within 1e-9 of 1.0 without being 1.0).
     pos = np.full(n, s - 1, dtype=np.int64)
-    times = block_time_table(blocks, (1.0,))[:, 0]
+    times = block_time_table_arrays(ba, (1.0,))[:, 0]
     energies = busy_energy_table(times[:, None], utils, (1.0,), power)[:, 0]
     group_total = np.array([sum(times.tolist())])
     group_budget = np.array([deadline_s * (1.0 - error_margin)])
     _run_downclock_tables(times_tab, energies_tab, pos, times, energies,
                           np.zeros(n, dtype=np.int64), group_total,
                           group_budget)
-    plans = _make_plans(blocks, slot, (states[p] for p in pos.tolist()),
-                        times.tolist(), energies.tolist())
-    feasible = sum(times.tolist()) <= deadline_s + 1e-9
-    return SchedulePlan(planner, deadline_s, plans, feasible)
+    feasible = bool(sum(times.tolist()) <= deadline_s + 1e-9)
+    return PlanArrays(planner, deadline_s, slot, ba.index,
+                      states_arr[pos], times, energies, feasible)
+
+
+def plan_dvfs(
+    blocks: Sequence[BlockInfo],
+    deadline_s: float,
+    *,
+    planner: str = "paper",
+    ladder: FrequencyLadder = DEFAULT_LADDER,
+    power: PowerModel = TPU_V5E_POWER,
+    error_margin: float = 0.05,
+    adaptive_margin: bool = False,
+) -> SchedulePlan:
+    """Build a frequency plan for ``blocks`` under ``deadline_s``.
+
+    ``error_margin`` reserves a fraction of the budget (paper Fig. 5's "reserved
+    area").  With ``adaptive_margin`` the reserve becomes max(error_margin, block CI
+    half-width): sampling uncertainty drives the reserve.
+    """
+    if len(blocks) == 0:
+        return SchedulePlan(planner, deadline_s, (), True)
+    pa = plan_dvfs_arrays(BlockArrays.from_blocks(blocks), deadline_s,
+                          planner=planner, ladder=ladder, power=power,
+                          error_margin=error_margin,
+                          adaptive_margin=adaptive_margin)
+    return SchedulePlan(pa.planner, deadline_s, pa.to_blocks(), pa.feasible)
+
+
+def plan_dvo_arrays(
+    ba: BlockArrays,
+    deadline_s: float,
+    *,
+    power: PowerModel = TPU_V5E_POWER,
+) -> PlanArrays:
+    """SoA Data-Variety-Oblivious baseline (see ``plan_dvo``)."""
+    n = max(len(ba), 1)
+    slot = deadline_s / n
+    times = block_time_table_arrays(ba, (1.0,))[:, 0]
+    energies = busy_energy_table(times[:, None], ba.util, (1.0,), power)[:, 0]
+    feasible = bool(sum(times.tolist()) <= deadline_s + 1e-9)
+    return PlanArrays("dvo", deadline_s, slot, ba.index,
+                      np.ones(len(ba)), times, energies, feasible)
 
 
 def plan_dvo(
@@ -556,15 +632,9 @@ def plan_dvo(
     power: PowerModel = TPU_V5E_POWER,
 ) -> SchedulePlan:
     """Data-Variety-Oblivious baseline: everything at f_max, same slot layout."""
-    n = max(len(blocks), 1)
-    slot = deadline_s / n
-    times = block_time_table(blocks, (1.0,))[:, 0]
-    energies = busy_energy_table(times[:, None], _block_utils(blocks), (1.0,),
-                                 power)[:, 0]
-    plans = _make_plans(blocks, slot, (1.0 for _ in blocks), times.tolist(),
-                        energies.tolist())
-    feasible = sum(times.tolist()) <= deadline_s + 1e-9
-    return SchedulePlan("dvo", deadline_s, plans, feasible)
+    pa = plan_dvo_arrays(BlockArrays.from_blocks(blocks), deadline_s,
+                         power=power)
+    return SchedulePlan("dvo", deadline_s, pa.to_blocks(), pa.feasible)
 
 
 def simulate(

@@ -53,12 +53,21 @@ class BlockDataset:
         return rng.dirichlet(np.ones(len(SOURCES)) * 1.5)
 
     def match_densities(self) -> np.ndarray:
-        """Zipf-ranked predicate densities, shuffled to aggregation order."""
+        """Zipf-ranked predicate densities, shuffled to aggregation order.
+
+        Cached: ``block(i)`` reads one entry per call, and recomputing the
+        whole Zipf ranking per block turns chunked iteration quadratic.
+        """
+        cached = self.__dict__.get("_densities")
+        if cached is not None:
+            return cached
         w = zipf_weights(self.n_blocks, self.variety_z)
         d = self.base_match_density + (self.max_match_density
                                        - self.base_match_density) * w / w.max()
         rng = np.random.default_rng(self.seed + 7)
-        return d[rng.permutation(self.n_blocks)]
+        d = d[rng.permutation(self.n_blocks)]
+        self.__dict__["_densities"] = d
+        return d
 
     def block(self, i: int, *, with_tokens: bool = True) -> dict:
         """Materialize block i: tokens + numeric columns + predicate.
@@ -102,6 +111,55 @@ class BlockDataset:
             matches=hits,
             selected=int(b["select"].sum()),
         )
+
+    def iter_token_chunks(self, chunk_size: int = 256) -> Iterator[tuple]:
+        """Yield ``(start, tokens)`` with ``tokens`` an (B, R, L) int32 stack.
+
+        The chunked feed for the streaming pipeline and the batched stats
+        kernel: blocks are materialized ``chunk_size`` at a time, never the
+        whole dataset (bounded memory at large ``n_blocks``).
+        """
+        for start in range(0, self.n_blocks, chunk_size):
+            stop = min(start + chunk_size, self.n_blocks)
+            toks = np.stack([self.block(i)["tokens"]
+                             for i in range(start, stop)])
+            yield start, toks.astype(np.int32, copy=False)
+
+    def stats_soa(self, chunk_size: int = 256, *,
+                  interpret: bool | None = None) -> dict:
+        """All blocks' ``BlockStats`` as SoA arrays via the batched kernel.
+
+        One ``block_stats_batched`` dispatch per chunk computes every
+        block's [nonpad, matches, mass] in a single fused pass
+        (``repro.kernels.block_stats``); ``selected`` comes from the
+        predicate column directly.  Returns a dict of (n_blocks,) arrays
+        with the same fields as ``stats(i)`` plus ``mass`` — and never
+        builds a ``BlockStats`` object.
+        """
+        from repro.kernels import ops
+        n = self.n_blocks
+        out = {
+            "records": np.full(n, self.records_per_block, dtype=np.int64),
+            "tokens": np.zeros(n, dtype=np.int64),
+            "tokens_padded": np.full(
+                n, self.records_per_block * self.max_len, dtype=np.int64),
+            "matches": np.zeros(n, dtype=np.int64),
+            "selected": np.zeros(n, dtype=np.int64),
+            "mass": np.zeros(n, dtype=np.float64),
+        }
+        for start in range(0, n, chunk_size):
+            stop = min(start + chunk_size, n)
+            blocks = [self.block(i) for i in range(start, stop)]
+            toks = np.stack([b["tokens"] for b in blocks]).astype(
+                np.int32, copy=False)
+            stats = np.asarray(ops.block_stats_batched(
+                toks, pattern=self.grep_pattern, interpret=interpret))
+            out["tokens"][start:stop] = stats[:, 0].astype(np.int64)
+            out["matches"][start:stop] = stats[:, 1].astype(np.int64)
+            out["mass"][start:stop] = stats[:, 2].astype(np.float64)
+            out["selected"][start:stop] = [int(b["select"].sum())
+                                           for b in blocks]
+        return out
 
     def __iter__(self) -> Iterator[dict]:
         for i in range(self.n_blocks):

@@ -50,6 +50,8 @@ def _tile_stats(toks, row_mask, pattern: tuple):
 
     p = len(pattern)
     length = toks.shape[1]
+    if length < p:  # pattern cannot fit in a row: zero matches by definition
+        return nonpad, jnp.float32(0.0), mass
     hits = jnp.ones((toks.shape[0], length - p + 1), jnp.bool_)
     for j, pj in enumerate(pattern):
         hits = hits & (toks[:, j:length - p + 1 + j] == pj)

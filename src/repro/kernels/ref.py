@@ -63,6 +63,8 @@ def block_stats_ref(tokens, pattern=(17, 23, 5)):
     mass = toks.astype(jnp.float32).sum()
     p = len(pattern)
     length = toks.shape[1]
+    if length < p:  # pattern cannot fit in a row
+        return jnp.stack([nonpad, jnp.float32(0.0), mass])
     hits = jnp.ones((toks.shape[0], length - p + 1), bool)
     for j, pj in enumerate(pattern):
         hits = hits & (toks[:, j:length - p + 1 + j] == pj)

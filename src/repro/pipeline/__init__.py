@@ -1,0 +1,40 @@
+"""Streaming dataset→plan pipeline — DV-DVFS at the million-block regime.
+
+The paper's pipeline (Fig. 3/4) is sample → estimate → plan.  The object
+path builds one ``BlockStats``/``BlockEstimate``/``BlockInfo``/``BlockPlan``
+per block per stage; at 10⁶ blocks the Python object churn dwarfs the actual
+math.  This package is the same pipeline as chunked structure-of-arrays
+flow:
+
+    chunk source ──> sample_blocks_soa / block_stats_batched_pallas
+                 ──> EstimateArrays (SoA)
+                 ──> BlockArrays ──> plan_dvfs_arrays / plan_cluster_arrays
+                 ──> PlanArrays / ClusterPlanArrays
+
+Chunks are bounded (``PipelineConfig.chunk_size``, default 64k blocks) so
+peak memory is bounded by chunk size plus the per-block SoA accumulators,
+not the dataset; no per-block Python object is created anywhere on the
+path (``to_blocks()`` materializes them on demand only).
+
+Equivalence contract (``tests/test_pipeline.py``): the streamed plans are
+IDENTICAL — same frequency per block, same energies — to the object path
+run on the same estimates, for any chunk size, including chunk boundaries
+that split a node's block set; and with ``sampler="exact"`` the estimates
+themselves are bit-identical to ``repro.core.sampling.sample_blocks``.
+
+Throughput/RSS numbers: ``benchmarks/run.py --section pipeline``.
+"""
+from repro.pipeline.sources import synthetic_cost_chunks
+from repro.pipeline.stream import (PipelineConfig, plan_estimates,
+                                   stream_estimates, stream_estimates_tokens,
+                                   stream_plan, token_chunk_estimates)
+
+__all__ = [
+    "PipelineConfig",
+    "plan_estimates",
+    "stream_estimates",
+    "stream_estimates_tokens",
+    "stream_plan",
+    "synthetic_cost_chunks",
+    "token_chunk_estimates",
+]

@@ -133,3 +133,44 @@ def test_block_stats_batched_full_blocks():
                                   interpret=True)
     want = ref.block_stats_batched_ref(toks, None, (17, 23, 5))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("nb,r,length,br", [(1, 5, 24, 128), (1, 1, 16, 128),
+                                            (4, 3, 24, 128), (1, 128, 24, 32)])
+def test_block_stats_batched_small_shapes(nb, r, length, br):
+    """n_rows < tile and n_blocks == 1: the ragged masking path must be
+    exact when the whole block fits inside one (possibly padded) tile."""
+    rng = np.random.default_rng(hash((nb, r, length)) % 2**31)
+    toks = rng.integers(0, 50, (nb, r, length)).astype(np.int32)
+    toks[:, 0, :3] = (17, 23, 5)
+    got = ops.block_stats_batched(jnp.asarray(toks), None, (17, 23, 5),
+                                  block_rows=br, interpret=True)
+    want = ref.block_stats_batched_ref(jnp.asarray(toks), None, (17, 23, 5))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+    assert np.asarray(got).shape == (nb, 3)
+
+
+def test_block_stats_batched_single_block_ragged_length():
+    """n_blocks == 1 with a length < R: pad rows masked, poison ignored."""
+    rng = np.random.default_rng(3)
+    toks = np.zeros((1, 40, 24), np.int32)
+    toks[0, :17] = rng.integers(0, 50, (17, 24))
+    toks[0, 0, :3] = (17, 23, 5)
+    toks[0, 17:, :3] = (17, 23, 5)  # poison the padding
+    got = ops.block_stats_batched(jnp.asarray(toks), jnp.asarray([17]),
+                                  (17, 23, 5), block_rows=16, interpret=True)
+    want = ref.block_stats_batched_ref(jnp.asarray(toks), [17], (17, 23, 5))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_block_stats_pattern_longer_than_row():
+    """A pattern that cannot fit in a row yields zero matches, not a crash."""
+    rng = np.random.default_rng(4)
+    toks = rng.integers(1, 50, (8, 2)).astype(np.int32)
+    got = np.asarray(ops.block_stats(jnp.asarray(toks), (17, 23, 5),
+                                     interpret=True))
+    assert got[1] == 0.0
+    assert got[0] == float((toks != 0).sum())
+    bat = np.asarray(ops.block_stats_batched(
+        jnp.asarray(toks[None]), None, (17, 23, 5), interpret=True))
+    assert bat[0, 1] == 0.0

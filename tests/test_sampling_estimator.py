@@ -64,3 +64,64 @@ def test_roofline_time_model_terms():
     assert rt.time_at(1.0) == pytest.approx(1.0)
     assert rt.time_at(0.5) == pytest.approx(2.0)   # compute-bound below f*
     assert rt.zero_cost_freq() == pytest.approx(1.0)
+
+
+# --- degenerate-input guards (the streamed pipeline feeds these raw) --------
+
+def test_zero_variance_block_has_exact_zero_width_ci():
+    costs = np.full(500, 3.25)
+    est = sample_block_cost(costs, fraction=0.05, seed=0)
+    assert est.total == pytest.approx(costs.sum())
+    assert est.ci_low == est.total == est.ci_high
+    assert est.rel_halfwidth == 0.0
+
+
+def test_single_record_block_never_nan():
+    est = sample_block_cost(np.asarray([7.5]), fraction=0.05, seed=0)
+    assert est.n_sampled == 1 and est.n_records == 1
+    assert est.total == 7.5
+    assert np.isfinite([est.ci_low, est.ci_high]).all()
+    assert est.rel_halfwidth == 0.0
+
+
+def test_min_samples_zero_still_samples_at_least_one_record():
+    """min_samples=0 with a tiny fraction used to produce an empty sample
+    (NaN mean); the k >= 1 guard keeps the estimate finite."""
+    est = sample_block_cost(np.ones(10), fraction=1e-9, min_samples=0, seed=0)
+    assert est.n_sampled == 1
+    assert np.isfinite(est.total)
+
+
+def test_n_boot_must_be_positive():
+    with pytest.raises(ValueError):
+        sample_block_cost(np.ones(10), n_boot=0)
+
+
+def test_required_sample_size_degenerate_inputs():
+    assert required_sample_size(cov=0.0) == 1  # zero variance: one record
+    with pytest.raises(ValueError):
+        required_sample_size(cov=-0.5)
+    with pytest.raises(ValueError):
+        required_sample_size(cov=float("nan"))
+    with pytest.raises(ValueError):
+        required_sample_size(cov=1.0, rel_err=0.0)
+    with pytest.raises(ValueError):
+        required_sample_size(cov=1.0, confidence=1.0)
+
+
+def test_sample_blocks_soa_degenerate_blocks():
+    from repro.core import sample_blocks_soa
+    # zero-variance, single-record, and empty blocks packed in one ragged
+    # chunk: no NaN anywhere, zero-width CI where variance is zero
+    costs = np.zeros((3, 400))
+    costs[0] = 2.0          # zero variance
+    costs[1, 0] = 9.0       # single record
+    lengths = np.asarray([400, 1, 0])
+    est = sample_blocks_soa(costs, lengths, seed=1)
+    assert np.isfinite(est.total).all()
+    assert np.isfinite(est.ci_low).all() and np.isfinite(est.ci_high).all()
+    assert est.total[0] == pytest.approx(800.0)
+    assert est.ci_low[0] == est.total[0] == est.ci_high[0]
+    assert est.total[1] == 9.0 and est.n_sampled[1] == 1
+    assert est.total[2] == 0.0 and est.n_sampled[2] == 0
+    assert np.all(est.rel_halfwidth >= 0.0)
