@@ -10,6 +10,11 @@ planner, ...).  A key present in both files whose NEW throughput fell more
 than ``threshold`` below OLD is a regression: they are printed and the
 process exits 1 (CI-friendly).  Keys present in only one file are reported
 but never fail the diff — sections come and go as benchmarks evolve.
+
+Blobs carry a ``schema_version`` stamp (``benchmarks.run.SCHEMA_VERSION``)
+plus the producing ``git_sha``; two blobs with different schema versions
+are refused outright (exit 2) instead of silently comparing stale row
+shapes — a blob with no stamp is treated as schema 1.
 """
 from __future__ import annotations
 
@@ -20,7 +25,7 @@ import sys
 METRIC = "blocks_per_s"
 _ID_FIELDS = ("n", "deadline", "planner", "scenario", "app", "z", "nodes",
               "sampler_blocks", "kernel_blocks", "token_blocks",
-              "cluster_blocks")
+              "cluster_blocks", "fault", "mode", "cap")
 
 
 def collect(blob: dict) -> dict:
@@ -48,9 +53,19 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     with open(args.old) as f:
-        old = collect(json.load(f))
+        old_blob = json.load(f)
     with open(args.new) as f:
-        new = collect(json.load(f))
+        new_blob = json.load(f)
+    old_schema = old_blob.get("schema_version", 1)
+    new_schema = new_blob.get("schema_version", 1)
+    if old_schema != new_schema:
+        print(f"refusing to diff: schema v{old_schema} "
+              f"(sha {old_blob.get('git_sha', '?')}) vs v{new_schema} "
+              f"(sha {new_blob.get('git_sha', '?')}) — regenerate the old "
+              f"blob with the current benchmarks")
+        return 2
+    old = collect(old_blob)
+    new = collect(new_blob)
 
     shared = sorted(set(old) & set(new))
     if not shared:

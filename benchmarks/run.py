@@ -19,6 +19,11 @@ Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).  Sections:
   cluster  — multi-node planner vs per-node independent Algorithm 1 on
              heterogeneous nodes, plus online re-planning under a mid-run
              slowdown (datasets × apps × node counts × deadline tightness)
+  runtime  — event-driven cluster runtime (repro.runtime) scenario grid:
+             faults × migration on/off × power-cap levels × deadline
+             tightness, with a 10k-block fault+migration+cap smoke row;
+             asserts migration recovers a deadline f_max alone misses and
+             the cap trades deadline slack for lower peak power
   roofline — summary of results/roofline_sp.json (built from the dry-run)
   train    — tiny end-to-end LM training with the DV-DVFS controller
   serve    — batched decode with roofline-planned windows
@@ -30,8 +35,24 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
+
+# bumped whenever row shapes / section semantics change incompatibly;
+# benchmarks.compare refuses to diff blobs whose schemas differ
+SCHEMA_VERSION = 2
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
 
 
 def _row(name: str, us: float, derived: str):
@@ -432,6 +453,156 @@ def bench_cluster():
     return rows
 
 
+def bench_runtime():
+    """Event-driven cluster runtime scenario grid (repro.runtime).
+
+    Three sub-grids over one Zipf workload on heterogeneous nodes:
+
+      * fault grid — deadline tightness × fault severity × migration
+        on/off, all online: shows where clock-up alone recovers and where
+        migration is the only recovery.  Asserts the acceptance scenario —
+        under the severe fault, the f_max-only run misses the deadline and
+        the migration run meets it.
+      * power-cap grid — cap levels against the uncapped run's peak draw:
+        the capped plans/runs trade deadline slack for lower peak power.
+        Asserts at least one capped run meets the deadline at strictly
+        lower peak power.
+      * 10k-block smoke — fault + migration + power cap + actuation
+        latency at once; the row CI guards with a wall-clock ceiling.
+    """
+    import numpy as np
+
+    from repro.cluster import (NodeSpec, SlowdownEvent, assign_blocks,
+                               plan_cluster)
+    from repro.core import BlockInfo, FrequencyLadder, zipf_block_sizes
+    from repro.runtime import ActuationModel, RuntimeConfig, run_cluster
+
+    deep = FrequencyLadder(
+        states=tuple(round(f, 2) for f in np.arange(0.35, 1.001, 0.05)))
+
+    def make(n_blocks, speeds, slack, z=1.0, **plan_kw):
+        sizes = zipf_block_sizes(n_blocks, max(10 * n_blocks, 10000), z=z,
+                                 seed=0)
+        costs = sizes / sizes.mean() * 5.0
+        blocks = [BlockInfo(i, float(c)) for i, c in enumerate(costs)]
+        nodes = [NodeSpec(f"n{k}", speed=s, ladder=deep)
+                 for k, s in enumerate(speeds)]
+        mk = max(sum(b.est_time_fmax for b in g) / n.speed
+                 for g, n in zip(assign_blocks(blocks, nodes), nodes))
+        deadline = mk * slack
+        plan = plan_cluster(blocks, nodes, deadline, assignment="lpt",
+                            **plan_kw)
+        return blocks, nodes, deadline, plan
+
+    rows = []
+
+    # --- fault grid: tightness x severity x migration -----------------------
+    recovered_by_migration_only = False
+    for tag, slack in (("tight", 1.5), ("ample", 2.2)):
+        blocks, nodes, deadline, plan = make(24, (1.0, 0.8, 1.25), slack)
+        n0_half = len(plan.node_plans[0].blocks) // 2 - 1
+        for fault, factor in (("none", None), ("slow2x", 2.0),
+                              ("slow4x", 4.0)):
+            events = [] if factor is None else \
+                [SlowdownEvent("n0", after_block=n0_half, factor=factor)]
+            outcomes = {}
+            for mode in ("static", "online", "migrate"):
+                cfg = RuntimeConfig(
+                    online=mode != "static", migrate=mode == "migrate",
+                    ewma_alpha=0.7, replan_threshold=0.1, log_events=False)
+                rep = run_cluster(plan, blocks, config=cfg, events=events,
+                                  est_blocks=blocks if mode != "static"
+                                  else None)
+                outcomes[mode] = rep
+                rows.append({"scenario": "fault_grid", "deadline": tag,
+                             "fault": fault, "mode": mode,
+                             "met": rep.deadline_met,
+                             "makespan_s": rep.makespan_s,
+                             "energy_j": rep.total_energy_j,
+                             "replans": rep.n_replans,
+                             "migrations": rep.n_migrations})
+            if tag == "ample" and fault == "slow4x":
+                # acceptance: migration recovers what f_max alone cannot
+                assert not outcomes["online"].deadline_met, \
+                    "expected the clock-up-only run to miss under slow4x"
+                assert outcomes["migrate"].deadline_met, \
+                    "expected migration to recover the slow4x deadline"
+                recovered_by_migration_only = True
+            _row(f"runtime_{tag}_{fault}",
+                 outcomes["migrate"].makespan_s * 1e6 / 24,
+                 f"static_met={outcomes['static'].deadline_met};"
+                 f"online_met={outcomes['online'].deadline_met};"
+                 f"migrate_met={outcomes['migrate'].deadline_met};"
+                 f"moves={outcomes['migrate'].n_migrations}")
+    assert recovered_by_migration_only
+
+    # --- power-cap grid: cap levels vs the uncapped peak --------------------
+    blocks, nodes, deadline, plan = make(24, (1.0, 0.8, 1.25), 1.8)
+    free = run_cluster(plan, blocks, config=RuntimeConfig(log_events=False))
+    cap_traded = False
+    rows.append({"scenario": "power_cap", "cap": "none",
+                 "met": free.deadline_met, "makespan_s": free.makespan_s,
+                 "peak_power_w": free.peak_power_w,
+                 "energy_j": free.total_energy_j})
+    _row("runtime_cap_none", free.makespan_s * 1e6 / 24,
+         f"met={free.deadline_met};peak_w={free.peak_power_w:.0f}")
+    for cap_tag, frac in (("cap95", 0.95), ("cap85", 0.85)):
+        cap = free.peak_power_w * frac
+        _, _, _, plan_c = make(24, (1.0, 0.8, 1.25), 1.8, power_cap_w=cap)
+        rep = run_cluster(plan_c, blocks,
+                          config=RuntimeConfig(power_cap_w=cap,
+                                               log_events=False))
+        assert rep.peak_power_w <= cap + 1e-9
+        rows.append({"scenario": "power_cap", "cap": cap_tag, "cap_w": cap,
+                     "met": rep.deadline_met, "makespan_s": rep.makespan_s,
+                     "peak_power_w": rep.peak_power_w,
+                     "plan_cap_ok": plan_c.power_cap_ok,
+                     "energy_j": rep.total_energy_j})
+        if rep.deadline_met and rep.peak_power_w < free.peak_power_w - 1e-6:
+            cap_traded = True  # lower peak, deadline still met
+        _row(f"runtime_{cap_tag}", rep.makespan_s * 1e6 / 24,
+             f"met={rep.deadline_met};peak_w={rep.peak_power_w:.0f};"
+             f"vs_free={rep.peak_power_w / free.peak_power_w:.2f}x")
+    assert cap_traded, "no capped run traded slack for lower peak power"
+
+    # --- 10k-block smoke: everything on at once (CI wall ceiling) -----------
+    # cap sits just under the plan's conservative Σ of per-node peak draws
+    # (the quantity the plan-time screen bounds), so the capped plan stays
+    # deadline-feasible and migration keeps target capacity to work with
+    n = 10_000
+    blocks, nodes, deadline, plan_free = make(n, (1.0, 0.8, 1.25, 0.9, 1.1),
+                                              2.0)
+    sum_peaks = sum(max(np_.node.power.power(1.0, bp.rel_freq)
+                        for bp in np_.blocks)
+                    for np_ in plan_free.node_plans)
+    cap = sum_peaks * 0.95
+    plan = plan_cluster(blocks, nodes, deadline, assignment="lpt",
+                        power_cap_w=cap)
+    assert plan.power_cap_ok, "smoke plan should pass the Σ-power screen"
+    events = [SlowdownEvent("n0", after_block=200, factor=3.0)]
+    cfg = RuntimeConfig(online=True, migrate=True, power_cap_w=cap,
+                        actuation=ActuationModel(latency_s=0.05,
+                                                 switch_energy_j=1.0),
+                        ewma_alpha=0.7, replan_threshold=0.1,
+                        log_events=False)
+    t0 = time.perf_counter()
+    rep = run_cluster(plan, blocks, config=cfg, events=events,
+                      est_blocks=blocks)
+    wall = time.perf_counter() - t0
+    assert rep.peak_power_w <= cap + 1e-9
+    assert rep.deadline_met and rep.n_migrations >= 1, \
+        "smoke scenario should recover the deadline via migration"
+    rows.append({"scenario": "smoke10k", "n": n, "wall_s": wall,
+                 "blocks_per_s": n / wall, "met": rep.deadline_met,
+                 "migrations": rep.n_migrations, "replans": rep.n_replans,
+                 "switches": rep.n_switches,
+                 "peak_power_w": rep.peak_power_w, "cap_w": cap})
+    _row("runtime_smoke10k", wall * 1e6 / n,
+         f"blocks_per_s={n / wall:,.0f};met={rep.deadline_met};"
+         f"moves={rep.n_migrations};peak_w={rep.peak_power_w:.0f}")
+    return rows
+
+
 def bench_roofline():
     out = {}
     for tag, path in (("base", "results/roofline_sp.json"),
@@ -525,6 +696,7 @@ def main() -> None:
                           False),
         "pipeline": (lambda: bench_pipeline(quick=args.quick), False),
         "cluster": (bench_cluster, False),
+        "runtime": (bench_runtime, False),
         "roofline": (bench_roofline, False),
         "train": (bench_train, False),
         "serve": (bench_serve, False),
@@ -533,7 +705,9 @@ def main() -> None:
         raise SystemExit(f"unknown section: {args.section} "
                          f"(choose from {', '.join(sections)})")
 
-    results = {}
+    # stamped so compare.py can refuse to diff incompatible blobs and so a
+    # saved artifact names the commit that produced it
+    results = {"schema_version": SCHEMA_VERSION, "git_sha": _git_sha()}
     print("name,us_per_call,derived")
     for name, (runner, quick_skips) in sections.items():
         if args.section is not None and name != args.section:
@@ -545,7 +719,8 @@ def main() -> None:
     os.makedirs(os.path.dirname(args.save), exist_ok=True)
     with open(args.save, "w") as f:
         json.dump(results, f, indent=2, default=str)
-    print(f"# saved -> {args.save}")
+    print(f"# saved -> {args.save} (schema v{SCHEMA_VERSION}, "
+          f"{results['git_sha']})")
 
 
 if __name__ == "__main__":

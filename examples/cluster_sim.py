@@ -1,11 +1,14 @@
-"""Cluster demo — DV-DVFS on 4 heterogeneous nodes, offline and online.
+"""Cluster demo — DV-DVFS on heterogeneous nodes, offline, online, runtime.
 
 1. plan one Zipf-variety workload across heterogeneous nodes (LPT assignment
    + cross-node greedy down-clock) and compare against per-node independent
    Algorithm 1 on a round-robin split at the same deadline,
 2. hit one node with a mid-run 2x slowdown and watch the online re-planner
    (EWMA drift feedback) clock the late node up and still meet the deadline
-   that the static plan misses.
+   that the static plan misses,
+3. hit it with a 4x slowdown instead — clocking up to f_max cannot recover
+   that — and watch the event-driven runtime (repro.runtime) migrate queued
+   blocks to the nodes with slack and still meet the deadline.
 
 Run:  PYTHONPATH=src python examples/cluster_sim.py
 """
@@ -14,6 +17,7 @@ import numpy as np
 from repro.cluster import (NodeSpec, SlowdownEvent, assign_blocks,
                            plan_cluster, plan_independent, simulate_cluster)
 from repro.core import BlockInfo, FrequencyLadder, zipf_block_sizes
+from repro.runtime import RuntimeConfig, run_cluster
 
 
 def offline_demo():
@@ -65,6 +69,48 @@ def online_demo():
           f"(clocked up after the drift was detected)")
 
 
+def migration_demo():
+    print("=== 3) Cross-node migration when f_max cannot recover ===")
+    deep = FrequencyLadder(
+        states=tuple(round(f, 2) for f in np.arange(0.35, 1.001, 0.05)))
+    blocks = [BlockInfo(i, 5.0) for i in range(24)]
+    nodes = [NodeSpec("n0", speed=1.0, ladder=deep),
+             NodeSpec("n1", speed=0.8, ladder=deep),
+             NodeSpec("n2", speed=1.25, ladder=deep)]
+    mk = max(sum(b.est_time_fmax for b in g) / n.speed
+             for g, n in zip(assign_blocks(blocks, nodes), nodes))
+    deadline = mk * 2.2
+    plan = plan_cluster(blocks, nodes, deadline, assignment="lpt")
+    n0 = plan.node_plans[0]
+    events = [SlowdownEvent("n0", after_block=len(n0.blocks) // 2 - 1,
+                            factor=4.0)]
+    kw = dict(ewma_alpha=0.7, replan_threshold=0.1)
+    static = run_cluster(plan, blocks, events=events)
+    online = run_cluster(plan, blocks, events=events, est_blocks=blocks,
+                         config=RuntimeConfig(online=True, **kw))
+    mig = run_cluster(plan, blocks, events=events, est_blocks=blocks,
+                      config=RuntimeConfig(online=True, migrate=True, **kw))
+
+    print(f"  deadline {deadline:5.1f}s; n0 slows 4x mid-run")
+    print(f"  static        : makespan {static.makespan_s:6.1f}s  "
+          f"met={static.deadline_met}")
+    print(f"  online (f_max): makespan {online.makespan_s:6.1f}s  "
+          f"met={online.deadline_met}  replans={online.n_replans}")
+    print(f"  + migration   : makespan {mig.makespan_s:6.1f}s  "
+          f"met={mig.deadline_met}  moves={mig.n_migrations}")
+    for mv in mig.migrations:
+        print(f"      t={mv.time:5.1f}s  block {mv.block_index:2d}  "
+              f"{mv.src} -> {mv.dst}")
+    print("  per-node outcome (with migration):")
+    print("    node  blocks  in/out  busy_s  finish_s  energy_j  deadline")
+    for nr in mig.node_reports:
+        print(f"    {nr.name:4s}  {nr.n_blocks:6d}  "
+              f"{nr.migrated_in:3d}/{nr.migrated_out:<3d} "
+              f"{nr.busy_s:7.1f}  {nr.finish_s:8.1f}  {nr.energy_j:8.0f}  "
+              f"{'met' if nr.finish_s <= deadline + 1e-9 else 'MISS'}")
+
+
 if __name__ == "__main__":
     offline_demo()
     online_demo()
+    migration_demo()

@@ -56,9 +56,15 @@ Planner contract (see ``tests/test_planner_invariants.py``)
   same blocks and assignment;
 * assignment and down-clocking are deterministic for a fixed input.
 
-Not yet here (ROADMAP open items): asynchronous actuation (re-plan without a
-block boundary), cross-node block migration on straggler nodes, multi-backend
-power models learned from counters.
+Beyond the block boundary: ``repro.runtime`` subsumes ``simulate_cluster``'s
+loop with a discrete-event engine — asynchronous actuation (mid-block
+frequency switches with latency + switch energy), cross-node migration of
+queued blocks when clocking up to f_max cannot recover a straggler, and a
+cluster-wide instantaneous power cap (screened at plan time via
+``plan_cluster(..., power_cap_w=...)``, enforced at run time by the
+actuator).  ``simulate_cluster`` is now a thin compatibility wrapper over
+that engine; the original loop survives as ``simulate_cluster_reference``,
+the bit-for-bit equivalence oracle of ``tests/test_runtime.py``.
 """
 from repro.cluster.controller import OnlineReplanner
 from repro.cluster.node import NodeSpec
@@ -67,7 +73,7 @@ from repro.cluster.planner import (ClusterPlan, ClusterPlanArrays, NodePlan,
                                    assign_blocks, plan_cluster,
                                    plan_cluster_arrays, plan_independent)
 from repro.cluster.sim import (ClusterReport, NodeReport, SlowdownEvent,
-                               simulate_cluster)
+                               simulate_cluster, simulate_cluster_reference)
 
 __all__ = [
     "NodeSpec",
@@ -77,4 +83,5 @@ __all__ = [
     "plan_independent",
     "OnlineReplanner",
     "ClusterReport", "NodeReport", "SlowdownEvent", "simulate_cluster",
+    "simulate_cluster_reference",
 ]

@@ -45,6 +45,7 @@ class _NodeState:
     elapsed_s: float = 0.0
     done: int = 0
     replans: int = 0
+    last_feasible: bool = True   # feasibility of the most recent re-plan
 
 
 class OnlineReplanner:
@@ -94,12 +95,120 @@ class OnlineReplanner:
             return True
         return False
 
+    def on_telemetry(self, node_name: str, observed_s: float) -> bool:
+        """Event-driven entry for the runtime engine (``repro.runtime``).
+
+        A ``TELEMETRY`` event carries a finished block's wall time; this is
+        the same observation ``observe`` consumes in the block-boundary
+        loop, delivered through the event queue instead of a per-block
+        callback.  Returns True when the observation triggered a re-plan.
+        """
+        return self.observe(node_name, observed_s)
+
     @property
     def total_replans(self) -> int:
         return sum(st.replans for st in self._nodes.values())
 
     def straggler_events(self, node_name: str) -> list:
         return self._nodes[node_name].detector.events
+
+    # --- state the runtime's migration policy reads/edits --------------------
+    def base_est(self, index: int) -> float:
+        """The planner's base (undrifted) f_max estimate for one block."""
+        return self._base[index].est_time_fmax
+
+    def node_names(self) -> tuple:
+        return tuple(self._nodes)
+
+    def drift_of(self, node_name: str) -> float:
+        return self._nodes[node_name].drift
+
+    def queued(self, node_name: str) -> tuple:
+        """The node's remaining BlockPlans (head first), as a copy."""
+        return tuple(self._nodes[node_name].queue)
+
+    def node_feasible(self, node_name: str) -> bool:
+        """Did the node's most recent re-plan fit its remaining budget?"""
+        return self._nodes[node_name].last_feasible
+
+    def predicted_finish(self, node_name: str, *, at_fmax: bool = False
+                         ) -> float:
+        """Elapsed + drift-corrected predicted time of the remaining queue.
+
+        ``at_fmax`` prices every queued block at the node's f_max instead of
+        its planned frequency — the "is this node recoverable by clocking up
+        alone?" question the migration trigger asks.
+        """
+        st = self._nodes[node_name]
+        total = st.elapsed_s
+        for bp in st.queue:
+            f = st.spec.ladder.f_max if at_fmax else bp.rel_freq
+            total += st.spec.block_time(self._base[bp.index], f) * st.drift
+        return total
+
+    def predicted_block_time(self, node_name: str, index: int,
+                             rel_freq: float | None = None) -> float:
+        """Drift-corrected predicted time of one block on ``node_name``
+        (at the node's f_max unless ``rel_freq`` is given)."""
+        st = self._nodes[node_name]
+        f = st.spec.ladder.f_max if rel_freq is None else rel_freq
+        return st.spec.block_time(self._base[index], f) * st.drift
+
+    def predicted_miss(self, node_name: str, *, margin: float = 0.0) -> bool:
+        """True when the node misses the deadline even at f_max everywhere.
+
+        ``margin`` reserves a fraction of the deadline (Algorithm 1's
+        reserved area): the drift EWMA converges from below during a
+        slowdown, so a zero-margin prediction systematically flatters the
+        straggler right when the decision matters.
+        """
+        return self.predicted_finish(node_name, at_fmax=True) \
+            > self.deadline_s * (1.0 - margin) + 1e-9
+
+    def move_block(self, src: str, dst: str, block_index: int) -> None:
+        """Move one QUEUED block from ``src``'s queue to the tail of ``dst``.
+
+        The block re-enters at the destination's f_max (safe under the
+        migration feasibility guard); the destination's own later re-plans
+        spread its slack across the grown tail.  Appending never touches
+        ``dst``'s queue head, so an in-flight block is never re-planned or
+        moved by migration.
+        """
+        self.move_blocks(src, [(block_index, dst)])
+
+    def move_blocks(self, src: str, moves) -> None:
+        """Bulk ``move_block``: ``moves`` is ``[(block_index, dst), ...]``.
+
+        One pass over the source queue regardless of the move count — the
+        migration policy applies a whole batch at once instead of paying a
+        queue scan per block.
+        """
+        s = self._nodes[src]
+        dst_of = {int(i): d for i, d in moves}
+        if len(dst_of) != len(moves):
+            raise ValueError("duplicate block index in migration batch")
+        keep = []
+        for bp in s.queue:
+            dst = dst_of.pop(bp.index, None)
+            if dst is None:
+                keep.append(bp)
+                continue
+            d = self._nodes[dst]
+            base = self._base[bp.index]
+            f = d.spec.ladder.f_max
+            t = d.spec.block_time(base, f)
+            d.queue.append(dataclasses.replace(
+                bp, rel_freq=f, pred_time_s=t,
+                pred_energy_j=d.spec.block_energy(base, t, f)))
+        if dst_of:
+            raise KeyError(f"blocks {sorted(dst_of)} not queued on {src}")
+        s.queue = keep
+
+    def replan_node(self, node_name: str) -> None:
+        """Re-run the tail plan for one node (no-op on a drained queue)."""
+        st = self._nodes[node_name]
+        if st.queue:
+            self._replan_node(node_name, st)
 
     # --- internal ------------------------------------------------------------
     def _replan_node(self, name: str, st: _NodeState) -> None:
@@ -115,6 +224,7 @@ class OnlineReplanner:
                          error_margin=self.error_margin)
         st.queue = list(plan.blocks)
         st.drift_at_replan = st.drift
+        st.last_feasible = plan.feasible
         st.replans += 1
         self.replan_log.append({
             "node": name, "after_block": st.done, "drift": st.drift,

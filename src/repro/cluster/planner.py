@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import heapq
 from typing import Sequence
 
 import numpy as np
@@ -61,6 +62,22 @@ class NodePlan:
     def pred_energy_j(self) -> float:
         return sum(b.pred_energy_j for b in self.blocks)
 
+    def to_arrays(self, deadline_s: float) -> "NodePlanArrays":
+        """SoA form of this node plan (the runtime engine's native input).
+
+        The per-node feasible flag is THIS node's deadline verdict (as
+        ``plan_cluster_arrays`` produces), not the cluster-level one.
+        """
+        n = len(self.blocks)
+        slot = self.blocks[0].slot_s if self.blocks else deadline_s
+        pull = lambda attr, dt: np.fromiter(
+            (getattr(b, attr) for b in self.blocks), dt, count=n)
+        return NodePlanArrays(self.node, PlanArrays(
+            "cluster", deadline_s, slot, pull("index", np.int64),
+            pull("rel_freq", np.float64), pull("pred_time_s", np.float64),
+            pull("pred_energy_j", np.float64),
+            bool(self.pred_finish_s <= deadline_s + 1e-9)))
+
 
 @dataclasses.dataclass(frozen=True)
 class ClusterPlan:
@@ -68,6 +85,7 @@ class ClusterPlan:
     deadline_s: float
     node_plans: tuple
     feasible: bool
+    power_cap_ok: bool = True    # plan-time Σ-power screen (True when uncapped)
 
     @functools.cached_property
     def pred_makespan_s(self) -> float:
@@ -84,6 +102,14 @@ class ClusterPlan:
             for bp in np_.blocks:
                 out[bp.index] = np_.node.name
         return out
+
+    def to_arrays(self) -> "ClusterPlanArrays":
+        """SoA form (what ``repro.runtime`` consumes natively)."""
+        return ClusterPlanArrays(
+            self.planner, self.deadline_s,
+            tuple(np_.to_arrays(self.deadline_s)
+                  for np_ in self.node_plans),
+            self.feasible, self.power_cap_ok)
 
 
 def assign_blocks(
@@ -188,6 +214,10 @@ class ClusterPlanArrays:
     deadline_s: float
     node_plans: tuple  # of NodePlanArrays
     feasible: bool
+    power_cap_ok: bool = True  # plan-time Σ-power screen (True when uncapped)
+
+    def to_arrays(self) -> "ClusterPlanArrays":
+        return self  # runtime-entry symmetry with ClusterPlan.to_arrays
 
     @functools.cached_property
     def pred_makespan_s(self) -> float:
@@ -208,7 +238,7 @@ class ClusterPlanArrays:
     def to_cluster_plan(self) -> ClusterPlan:
         return ClusterPlan(self.planner, self.deadline_s,
                            tuple(np_.to_node_plan() for np_ in self.node_plans),
-                           self.feasible)
+                           self.feasible, self.power_cap_ok)
 
 
 def assign_block_arrays(
@@ -264,6 +294,67 @@ def assign_block_arrays(
     return [np.nonzero(idxs == k)[0] for k in range(len(nodes))]
 
 
+def _apply_power_cap(times_tab, energies_tab, ptab, pos, times, energies,
+                     group, group_total, group_budget, idle_w,
+                     cap_w: float) -> bool:
+    """Plan-time Σ-power screen: keep down-clocking until the conservative
+    concurrent draw — every node at its own peak-power block, empty nodes at
+    idle — fits under ``cap_w``.
+
+    The deadline greedy has already spent the cheap slack; this pass spends
+    what remains specifically on the blocks that set each node's power
+    peak.  Deterministic: each step targets the highest-peak node whose
+    peak block can still step down inside its deadline budget (ties to the
+    lower node id, then the lower item id), so a fixed plan always screens
+    to the same capped plan.  Mutates ``pos``/``times``/``energies``/
+    ``group_total`` in place; returns False when the cap is unreachable
+    (some peak is pinned by f_min or an exhausted budget).
+    """
+    n_groups = len(group_total)
+    heaps: list = [[] for _ in range(n_groups)]
+    for i in range(len(pos)):
+        heaps[group[i]].append((-ptab[i, pos[i]], i))
+    for h in heaps:
+        heapq.heapify(h)
+
+    def peak(g):
+        """(watts, item) at the group's current power peak (-1 when empty).
+
+        Lazy heap: entries priced at a stale ladder position are discarded
+        on sight (equal-power staleness is harmless — the watts are right).
+        """
+        h = heaps[g]
+        while h:
+            negp, i = h[0]
+            if ptab[i, pos[i]] == -negp:
+                return -negp, i
+            heapq.heappop(h)
+        return idle_w[g], -1
+
+    total = sum(peak(g)[0] for g in range(n_groups))
+    while total > cap_w + 1e-9:
+        best = None  # (peak_w, group, item, dt)
+        for g in range(n_groups):
+            pk, i = peak(g)
+            if i < 0 or pos[i] == 0:
+                continue  # empty group, or peak pinned at f_min
+            dt = times_tab[i, pos[i] - 1] - times[i]
+            if group_total[g] + dt > group_budget[g] + 1e-9:
+                continue  # stepping the peak would blow the deadline
+            if best is None or pk > best[0]:
+                best = (pk, g, i, dt)
+        if best is None:
+            return False
+        _, g, i, dt = best
+        pos[i] -= 1
+        times[i] = times_tab[i, pos[i]]
+        energies[i] = energies_tab[i, pos[i]]
+        group_total[g] += dt
+        heapq.heappush(heaps[g], (-ptab[i, pos[i]], i))
+        total = sum(peak(gg)[0] for gg in range(n_groups))
+    return True
+
+
 def plan_cluster_arrays(
     ba: BlockArrays,
     nodes: Sequence[NodeSpec],
@@ -271,6 +362,7 @@ def plan_cluster_arrays(
     *,
     assignment="auto",
     error_margin: float = 0.05,
+    power_cap_w: float | None = None,
 ) -> ClusterPlanArrays:
     """``plan_cluster`` over SoA input — the streamed-pipeline entry.
 
@@ -278,12 +370,21 @@ def plan_cluster_arrays(
     ``BlockArrays``), never materializes per-block objects, and produces the
     same assignment, frequencies, and energies as the object path (enforced
     by ``tests/test_pipeline.py``).
+
+    ``power_cap_w`` adds a cluster-wide Σ-power feasibility screen after
+    the deadline greedy (see ``_apply_power_cap``): the plan's conservative
+    concurrent draw must fit under the cap, extra down-clocks are spent on
+    peak-power blocks to get there, and ``feasible`` then means *both*
+    inside the deadline and under the cap (``power_cap_ok`` carries the
+    cap verdict separately).  The runtime engine enforces the same cap
+    instant-by-instant at execution (``repro.runtime``).
     """
     if not nodes:
         raise ValueError("need at least one node")
     if isinstance(assignment, str) and assignment == "auto":
         candidates = [plan_cluster_arrays(ba, nodes, deadline_s, assignment=s,
-                                          error_margin=error_margin)
+                                          error_margin=error_margin,
+                                          power_cap_w=power_cap_w)
                       for s in ("lpt", "pack", "round_robin")]
         feasible = [p for p in candidates if p.feasible]
         if feasible:
@@ -298,6 +399,8 @@ def plan_cluster_arrays(
     n_items = sum(len(g) for g in groups)
     times_tab = np.full((n_items, s_max), np.inf)
     energies_tab = np.full((n_items, s_max), np.inf)
+    ptab = np.full((n_items, s_max), np.inf) if power_cap_w is not None \
+        else None
     pos = np.empty(n_items, dtype=np.int64)
     times = np.empty(n_items)
     energies = np.empty(n_items)
@@ -314,6 +417,14 @@ def plan_cluster_arrays(
         times_tab[lo:hi, :len(states)] = tab
         energies_tab[lo:hi, :len(states)] = busy_energy_table(
             tab, sub.util, states, nd.power)
+        if ptab is not None:
+            # P(util, f) per (block, state) — the same ptab busy_energy_table
+            # folds into energies (energy = time * ptab)
+            fpow = np.array([float(np.clip(f, 0.0, 1.0)) ** nd.power.alpha
+                             for f in states])
+            util = np.clip(sub.util, 0.0, 1.0)
+            ptab[lo:hi, :len(states)] = nd.power.p_idle + \
+                (nd.power.p_full - nd.power.p_idle) * util[:, None] * fpow[None, :]
         t1 = block_time_table_arrays(sub, (1.0,))[:, 0] / nd.speed
         times[lo:hi] = t1
         energies[lo:hi] = busy_energy_table(t1[:, None], sub.util, (1.0,),
@@ -323,9 +434,16 @@ def plan_cluster_arrays(
         group_total[k] = sum(t1.tolist())
         lo = hi
 
+    group_budget = np.full(len(nodes), budget)
     _run_downclock_tables(times_tab, energies_tab, pos, times, energies,
-                          group, group_total,
-                          np.full(len(nodes), budget))
+                          group, group_total, group_budget)
+
+    cap_ok = True
+    if power_cap_w is not None:
+        cap_ok = _apply_power_cap(
+            times_tab, energies_tab, ptab, pos, times, energies, group,
+            group_total, group_budget,
+            [nd.power.p_idle for nd in nodes], power_cap_w)
 
     node_plans = []
     lo = 0
@@ -339,9 +457,10 @@ def plan_cluster_arrays(
                         bool(group_total[k] <= deadline_s + 1e-9))
         node_plans.append(NodePlanArrays(nd, pa))
         lo = hi
-    feasible = all(t <= deadline_s + 1e-9 for t in group_total.tolist())
+    feasible = all(t <= deadline_s + 1e-9 for t in group_total.tolist()) \
+        and cap_ok
     return ClusterPlanArrays("cluster", deadline_s, tuple(node_plans),
-                             feasible)
+                             feasible, cap_ok)
 
 
 def plan_cluster(
@@ -351,6 +470,7 @@ def plan_cluster(
     *,
     assignment="auto",
     error_margin: float = 0.05,
+    power_cap_w: float | None = None,
 ) -> "ClusterPlan | ClusterPlanArrays":
     """Assign blocks to nodes and greedily down-clock across the cluster.
 
@@ -360,6 +480,9 @@ def plan_cluster(
     deterministic, and by construction never worse than planning on the
     baseline's own round-robin split.
 
+    ``power_cap_w`` screens the plan against a cluster-wide instantaneous
+    power cap (see ``plan_cluster_arrays``).
+
     SoA path: passing a ``BlockArrays`` (e.g. estimates streamed by
     ``repro.pipeline``) returns a ``ClusterPlanArrays`` instead — same
     plans, zero per-block Python objects.
@@ -367,12 +490,14 @@ def plan_cluster(
     if isinstance(blocks, BlockArrays):
         return plan_cluster_arrays(blocks, nodes, deadline_s,
                                    assignment=assignment,
-                                   error_margin=error_margin)
+                                   error_margin=error_margin,
+                                   power_cap_w=power_cap_w)
     # the object path IS the SoA path (same assignment, same stacked tables,
     # same greedy) — a thin wrapper, so the two cannot diverge
     return plan_cluster_arrays(BlockArrays.from_blocks(blocks), nodes,
                                deadline_s, assignment=assignment,
-                               error_margin=error_margin).to_cluster_plan()
+                               error_margin=error_margin,
+                               power_cap_w=power_cap_w).to_cluster_plan()
 
 
 def plan_cluster_reference(

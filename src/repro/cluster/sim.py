@@ -1,15 +1,25 @@
-"""Cluster execution simulator — plans meet the truth (plus mid-run faults).
+"""Cluster execution simulator — compatibility surface over the runtime.
 
-Nodes run their block queues in parallel (no cross-node migration, so each
-node simulates independently); the cluster-level quantities are the makespan
-(max node finish), summed busy energy (paper formula 7), and the idle tail of
-every node up to the shared deadline.
+``simulate_cluster`` keeps its original signature and ``ClusterReport``
+shape but is now a thin wrapper over the event-driven engine in
+``repro.runtime``: with the defaults (no power cap, zero actuation latency,
+no migration) the engine reproduces the original block-boundary loop
+bit-for-bit, and the extra engine capabilities are exposed as optional
+keywords (``migrate``, ``actuation``, ``power_cap_w``; time-based
+``FaultEvent``s may be mixed into ``events``).  Use
+``repro.runtime.run_cluster`` directly for the full ``RuntimeReport``
+(event log, migrations, peak power).
 
 ``SlowdownEvent`` injects the classic mid-run fault: from the moment a node
-has finished ``after_block`` blocks, its true processing times are multiplied
-by ``factor`` (co-tenant interference, thermal throttling, a failing disk).
-With ``online=True`` an :class:`~repro.cluster.controller.OnlineReplanner`
-observes every block and re-plans drifting nodes' tails.
+has finished ``after_block`` blocks, its true processing times are
+multiplied by ``factor`` (co-tenant interference, thermal throttling, a
+failing disk).  Multiple events on one node apply in the total order
+``(after_block, factor)`` — NOT in input order, which used to silently
+decide the product's floating-point rounding when triggers tied.
+
+``simulate_cluster_reference`` preserves the original per-node Python loop
+(same event ordering fix) as the equivalence oracle the runtime is tested
+against — do not use it in hot paths.
 """
 from __future__ import annotations
 
@@ -20,7 +30,8 @@ from repro.core.scheduler import BlockInfo
 from repro.cluster.controller import OnlineReplanner
 from repro.cluster.planner import ClusterPlan
 
-__all__ = ["SlowdownEvent", "NodeReport", "ClusterReport", "simulate_cluster"]
+__all__ = ["SlowdownEvent", "NodeReport", "ClusterReport",
+           "simulate_cluster", "simulate_cluster_reference"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,17 +76,68 @@ def simulate_cluster(
     *,
     est_blocks: Sequence[BlockInfo] | None = None,
     online: bool = False,
+    events: Sequence = (),
+    replan_threshold: float = 0.15,
+    ewma_alpha: float = 0.3,
+    error_margin: float = 0.05,
+    migrate: bool = False,
+    actuation=None,
+    power_cap_w: float | None = None,
+) -> ClusterReport:
+    """Execute ``plan`` against true block costs (thin engine wrapper).
+
+    ``true_blocks`` mirror the planner's blocks with ``est_time_fmax`` set to
+    the actual f_max time (what sampling only estimated).  ``est_blocks``
+    default to ``true_blocks`` and seed the online controller's base
+    predictions; pass the planner's estimates when they differ from the
+    truth.  ``migrate``/``actuation``/``power_cap_w`` switch on the engine's
+    migration policy, actuation model, and cluster power cap (see
+    ``repro.runtime``); ``migrate=True`` implies ``online``.
+    """
+    from repro.runtime.actuator import ActuationModel
+    from repro.runtime.engine import RuntimeConfig, run_cluster
+    online = online or migrate
+    cfg = RuntimeConfig(
+        online=online, migrate=migrate,
+        actuation=actuation if actuation is not None else ActuationModel(),
+        power_cap_w=power_cap_w, replan_threshold=replan_threshold,
+        ewma_alpha=ewma_alpha, error_margin=error_margin, log_events=False)
+    rt = run_cluster(
+        plan, true_blocks, config=cfg, events=events,
+        est_blocks=(est_blocks if est_blocks is not None else true_blocks)
+        if online else None)
+    return ClusterReport(
+        planner=rt.planner,
+        deadline_s=rt.deadline_s,
+        makespan_s=rt.makespan_s,
+        total_energy_j=rt.total_energy_j,
+        idle_energy_j=rt.idle_energy_j,
+        deadline_met=rt.deadline_met,
+        node_reports=tuple(NodeReport(nr.name, nr.busy_s, nr.energy_j,
+                                      nr.n_blocks, nr.freqs)
+                           for nr in rt.node_reports),
+        n_replans=rt.n_replans,
+    )
+
+
+def simulate_cluster_reference(
+    plan: ClusterPlan,
+    true_blocks: Sequence[BlockInfo],
+    *,
+    est_blocks: Sequence[BlockInfo] | None = None,
+    online: bool = False,
     events: Sequence[SlowdownEvent] = (),
     replan_threshold: float = 0.15,
     ewma_alpha: float = 0.3,
     error_margin: float = 0.05,
 ) -> ClusterReport:
-    """Execute ``plan`` against true block costs.
+    """The original block-boundary loop — the runtime's equivalence oracle.
 
-    ``true_blocks`` mirror the planner's blocks with ``est_time_fmax`` set to
-    the actual f_max time (what sampling only estimated).  ``est_blocks``
-    default to ``true_blocks`` and seed the online controller's base
-    predictions; pass the planner's estimates when they differ from the truth.
+    Nodes run their queues independently; the only runtime capability it
+    models is the count-based ``SlowdownEvent`` (applied, like the engine,
+    in ``(after_block, factor)`` order).  ``tests/test_runtime.py`` asserts
+    the engine reproduces this loop bit-for-bit at zero actuation latency
+    with no cap; keep the two in lockstep when touching either.
     """
     truth = {b.index: b for b in true_blocks}
     controller = None
@@ -84,9 +146,13 @@ def simulate_cluster(
             plan, est_blocks if est_blocks is not None else true_blocks,
             replan_threshold=replan_threshold, ewma_alpha=ewma_alpha,
             error_margin=error_margin)
-    ev_by_node = {}
+    ev_by_node: dict = {}
     for ev in events:
         ev_by_node.setdefault(ev.node, []).append(ev)
+    for evs in ev_by_node.values():
+        # total order shared with the runtime: same-trigger events cannot
+        # apply in whatever order the caller happened to list them
+        evs.sort(key=lambda ev: (ev.after_block, ev.factor))
 
     node_reports = []
     for np_ in plan.node_plans:

@@ -191,6 +191,20 @@ class PlanArrays:
     def pred_total_energy(self) -> float:
         return float(self.pred_energy_j.sum())
 
+    def select(self, idx) -> "PlanArrays":
+        """Subset of the plan (same metadata) — how the runtime engine and
+        the migration policy slice queued block sets without materializing
+        ``BlockPlan`` objects."""
+        return PlanArrays(self.planner, self.deadline_s, self.slot_s,
+                          self.index[idx], self.rel_freq[idx],
+                          self.pred_time_s[idx], self.pred_energy_j[idx],
+                          self.feasible)
+
+    def split_at(self, k: int) -> tuple:
+        """(done-or-in-flight, still-queued) views at queue position ``k`` —
+        the runtime's in-flight/queued boundary over one node's plan."""
+        return self.select(slice(0, k)), self.select(slice(k, None))
+
     def to_blocks(self) -> tuple:
         """Materialize the ``BlockPlan`` tuple (on demand only)."""
         from repro.core.scheduler import _make_plans

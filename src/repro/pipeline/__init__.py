@@ -27,7 +27,8 @@ Throughput/RSS numbers: ``benchmarks/run.py --section pipeline``.
 from repro.pipeline.sources import synthetic_cost_chunks
 from repro.pipeline.stream import (PipelineConfig, plan_estimates,
                                    stream_estimates, stream_estimates_tokens,
-                                   stream_plan, token_chunk_estimates)
+                                   stream_plan, stream_run,
+                                   token_chunk_estimates)
 
 __all__ = [
     "PipelineConfig",
@@ -35,6 +36,7 @@ __all__ = [
     "stream_estimates",
     "stream_estimates_tokens",
     "stream_plan",
+    "stream_run",
     "synthetic_cost_chunks",
     "token_chunk_estimates",
 ]

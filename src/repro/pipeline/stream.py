@@ -23,7 +23,8 @@ from repro.core.scheduler import plan_dvfs_arrays
 from repro.core.soa import BlockArrays, EstimateArrays, PlanArrays
 
 __all__ = ["PipelineConfig", "stream_estimates", "stream_estimates_tokens",
-           "token_chunk_estimates", "plan_estimates", "stream_plan"]
+           "token_chunk_estimates", "plan_estimates", "stream_plan",
+           "stream_run"]
 
 # default linear record-cost model over the kernel's per-row features:
 # seconds ≈ w·[nonpad, matches, mass].  Values are arbitrary but fixed —
@@ -182,19 +183,24 @@ def plan_estimates(
     nodes: Sequence | None = None,
     assignment="auto",
     util: np.ndarray | None = None,
+    power_cap_w: float | None = None,
 ):
     """Planning stage: SoA estimates straight into the vectorized planner.
 
     Single-node by default (``PlanArrays``); passing ``nodes`` routes the
     same ``BlockArrays`` through ``plan_cluster_arrays``
-    (``ClusterPlanArrays``).
+    (``ClusterPlanArrays``), where ``power_cap_w`` adds the cluster-wide
+    Σ-power screen.
     """
     ba = est.to_block_arrays(util=util)
     if nodes is not None:
         from repro.cluster.planner import plan_cluster_arrays
         return plan_cluster_arrays(ba, nodes, deadline_s,
                                    assignment=assignment,
-                                   error_margin=config.error_margin)
+                                   error_margin=config.error_margin,
+                                   power_cap_w=power_cap_w)
+    if power_cap_w is not None:
+        raise ValueError("power_cap_w needs a cluster plan (pass nodes)")
     return plan_dvfs_arrays(ba, deadline_s, planner=config.planner,
                             ladder=config.ladder, power=config.power,
                             error_margin=config.error_margin,
@@ -219,3 +225,46 @@ def stream_plan(
         else stream_estimates(source, config)
     return plan_estimates(est, deadline_s, config, nodes=nodes,
                           assignment=assignment)
+
+
+def stream_run(
+    source,
+    deadline_s: float,
+    config: PipelineConfig = PipelineConfig(),
+    *,
+    nodes: Sequence,
+    assignment="auto",
+    truth: BlockArrays | None = None,
+    runtime=None,
+    events=(),
+    power_cap_w: float | None = None,
+):
+    """Dataset → plan → event-driven execution, SoA end to end.
+
+    The plan→runtime handoff: the accumulated ``EstimateArrays`` become a
+    ``ClusterPlanArrays`` (``power_cap_w`` screens the plan) which feeds
+    ``repro.runtime.run_cluster`` directly — a million streamed blocks go
+    from records to a simulated cluster run without one per-block Python
+    object on the planning side.  ``truth`` defaults to the estimates
+    themselves (drift-free execution); pass the real costs to study
+    estimate error, and ``events``/``runtime`` (a ``RuntimeConfig``) to
+    inject faults, migration, actuation latency, or the runtime-side cap.
+    """
+    from repro.runtime.engine import RuntimeConfig, run_cluster
+    est = source if isinstance(source, EstimateArrays) \
+        else stream_estimates(source, config)
+    cpa = plan_estimates(est, deadline_s, config, nodes=nodes,
+                         assignment=assignment, power_cap_w=power_cap_w)
+    ba = truth if truth is not None else est.to_block_arrays()
+    # default config keeps the event log off: at the million-block scale a
+    # per-event tuple log would defeat the pipeline's bounded memory
+    if runtime is None:
+        cfg = RuntimeConfig(power_cap_w=power_cap_w, log_events=False)
+    elif power_cap_w is not None and runtime.power_cap_w is None:
+        # the cap must bind at run time too, not just screen the plan
+        cfg = dataclasses.replace(runtime, power_cap_w=power_cap_w)
+    elif power_cap_w is not None and runtime.power_cap_w != power_cap_w:
+        raise ValueError("power_cap_w disagrees with runtime.power_cap_w")
+    else:
+        cfg = runtime
+    return run_cluster(cpa, ba, config=cfg, events=events)

@@ -1,0 +1,45 @@
+"""Event-driven cluster runtime: async DVFS actuation, migration, power cap.
+
+The block-boundary simulator (``repro.cluster.sim``) could only react when a
+block finished; a straggler under a tight deadline had no recourse once
+clocking up to f_max was not enough, and nothing modeled what a frequency
+switch actually costs.  This package replaces that loop with a
+discrete-event engine where four capabilities compose:
+
+  * **events** — a totally ordered queue ``(time, kind, node, seq)``
+    driving ``BLOCK_START / BLOCK_FINISH / FREQ_SWITCH / TELEMETRY /
+    FAULT`` (``repro.runtime.events``); pop order is a pure function of
+    the event set, so whole simulations are reproducible.
+  * **async actuation** — ``ActuationModel(latency_s, switch_energy_j)``:
+    switch requests land ``latency_s`` later, mid-block, with exact
+    partial-block accounting (a block split across k frequencies costs the
+    segment sums of the planner's own time/energy tables —
+    ``repro.runtime.actuator``).
+  * **migration** — when the online re-planner predicts a miss even at
+    f_max, queued (never in-flight) blocks move to the node with the most
+    slack, LPT keys, target-stays-feasible guard
+    (``repro.runtime.migrate``).
+  * **power cap** — ``power_cap_w`` bounds the instantaneous cluster draw:
+    launches clamp down the ladder or defer, clock-ups stagger until a
+    finish or down-switch frees headroom; ``plan_cluster(...,
+    power_cap_w=...)`` screens the same cap at plan time.
+
+``run_cluster`` consumes ``ClusterPlanArrays`` directly (streamed-pipeline
+plans feed straight in); ``repro.cluster.simulate_cluster`` is now a thin
+compatibility wrapper over this engine — with no faults, no cap, and zero
+actuation latency the engine reproduces the old loop bit-for-bit
+(``tests/test_runtime.py``).
+"""
+from repro.runtime.actuator import ActuationModel, PowerLedger
+from repro.runtime.engine import (ClusterRuntime, NodeRuntimeReport,
+                                  RuntimeConfig, RuntimeReport, run_cluster)
+from repro.runtime.events import Event, EventQueue, FaultEvent
+from repro.runtime.migrate import MigrationRecord, plan_moves
+
+__all__ = [
+    "ActuationModel", "PowerLedger",
+    "ClusterRuntime", "NodeRuntimeReport", "RuntimeConfig", "RuntimeReport",
+    "run_cluster",
+    "Event", "EventQueue", "FaultEvent",
+    "MigrationRecord", "plan_moves",
+]

@@ -1,0 +1,562 @@
+"""Deterministic discrete-event cluster runtime.
+
+Subsumes the block-boundary loop of ``repro.cluster.sim``: one event clock
+drives every node, so mid-block frequency switches (async actuation),
+time-based faults, cross-node migration, and a cluster-wide power cap all
+compose — none of them needs to wait for a block to finish.
+
+Contracts (``tests/test_runtime.py``):
+
+  compat      with no faults, no cap, and actuation latency 0 the engine
+              reproduces the block-boundary reference loop
+              (``simulate_cluster_reference``) bit-for-bit: per-node busy
+              seconds, energies, frequencies, and finish times are the
+              exact same float chains.
+  segments    a block split across k frequencies costs exactly
+              ``sum_j w_j * T(f_j)`` seconds and
+              ``sum_j w_j * T(f_j) * P(util, f_j)`` joules — the
+              ``block_time_table`` / ``busy_energy_table`` maths applied
+              per segment (see ``repro.runtime.actuator``).
+  migration   only queued blocks move, and only onto nodes that stay
+              predicted-feasible (see ``repro.runtime.migrate``).
+  power cap   the instantaneous cluster draw (busy nodes at ``P(util, f)``,
+              idle nodes at ``p_idle``) never exceeds ``power_cap_w``: block
+              launches are clamped to the highest fitting ladder state or
+              deferred entirely, and clock-ups are staggered until a finish
+              or down-switch releases headroom.
+  determinism the event queue is totally ordered (time, kind, node, seq),
+              every policy breaks ties by node/block id, and the engine
+              holds no RNG — two runs of one scenario produce identical
+              event logs.
+
+The engine consumes ``ClusterPlanArrays`` directly (the streamed pipeline's
+plans feed straight in; a ``ClusterPlan`` is normalized on entry).  In
+static mode no per-block Python object is ever materialized; online mode
+builds the ``OnlineReplanner``'s estimate objects once at startup.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.cluster.controller import OnlineReplanner
+from repro.cluster.planner import ClusterPlan, ClusterPlanArrays
+from repro.core.soa import BlockArrays
+from repro.runtime.actuator import ActuationModel, InFlight, PowerLedger
+from repro.runtime.events import (BLOCK_FINISH, BLOCK_START, FAULT,
+                                  FREQ_SWITCH, KIND_NAMES, TELEMETRY, Event,
+                                  EventQueue, FaultEvent)
+from repro.runtime.migrate import plan_moves
+
+__all__ = ["RuntimeConfig", "NodeRuntimeReport", "RuntimeReport",
+           "ClusterRuntime", "run_cluster"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Everything the event-driven run needs beyond the plan itself."""
+
+    online: bool = False               # feedback re-planning (OnlineReplanner)
+    migrate: bool = False              # cross-node migration (implies online)
+    actuation: ActuationModel = ActuationModel()
+    power_cap_w: float | None = None   # cluster-wide instantaneous cap
+    max_moves: int | None = None       # migration moves per trigger (None=all)
+    replan_threshold: float = 0.15     # controller knobs (as simulate_cluster)
+    ewma_alpha: float = 0.3
+    error_margin: float = 0.05
+    log_events: bool = True
+
+    def __post_init__(self):
+        if self.migrate and not self.online:
+            raise ValueError("migration needs the online controller "
+                             "(RuntimeConfig(online=True, migrate=True))")
+        if self.power_cap_w is not None and self.power_cap_w <= 0:
+            raise ValueError("power_cap_w must be positive")
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeRuntimeReport:
+    """Per-node outcome; the first five fields mirror ``sim.NodeReport``."""
+
+    name: str
+    busy_s: float
+    energy_j: float          # busy-only (paper formula 7), segments summed
+    n_blocks: int
+    freqs: tuple             # per finished block: the frequency it ENDED at
+    finish_s: float          # event time of the last block finish
+    n_switches: int          # applied mid-run transitions
+    switch_energy_j: float
+    migrated_in: int
+    migrated_out: int
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeReport:
+    planner: str
+    deadline_s: float
+    makespan_s: float        # max node finish TIME (gaps included)
+    total_energy_j: float    # busy-only, summed over nodes
+    idle_energy_j: float     # non-busy tail of every node up to the deadline
+    deadline_met: bool
+    node_reports: tuple      # of NodeRuntimeReport
+    n_replans: int = 0
+    n_migrations: int = 0
+    n_switches: int = 0
+    switch_energy_j: float = 0.0
+    peak_power_w: float = 0.0
+    power_cap_w: float | None = None
+    migrations: tuple = ()   # of migrate.MigrationRecord
+    event_log: tuple = ()    # (time, kind_name, node_name, *data) tuples
+
+    def improvement_vs(self, other) -> float:
+        """Fractional busy-energy improvement of self over ``other``."""
+        if other.total_energy_j <= 0:
+            return 0.0
+        return 1.0 - self.total_energy_j / other.total_energy_j
+
+
+class _NodeState:
+    """Mutable per-node runtime state (one per plan node)."""
+
+    __slots__ = ("spec", "nid", "idx", "freq", "ptr", "done", "busy_s",
+                 "energy_j", "freqs", "inflight", "hw_freq", "fault_factor",
+                 "slow_events", "pending_target", "want_up", "waiting",
+                 "finish_s", "n_switches", "switch_energy_j", "migrated_in",
+                 "migrated_out", "migrate_stuck")
+
+    def __init__(self, spec, nid: int, idx: np.ndarray, freq: np.ndarray):
+        self.spec = spec
+        self.nid = nid
+        self.idx = idx            # static queue: global block indices
+        self.freq = freq          # static queue: planned frequencies
+        self.ptr = 0              # static queue head
+        self.done = 0
+        self.busy_s = 0.0
+        self.energy_j = 0.0
+        self.freqs: list = []
+        self.inflight: InFlight | None = None
+        self.hw_freq: float | None = None   # set at first launch
+        self.fault_factor = 1.0             # product of time-based faults
+        self.slow_events: list = []         # sorted (after_block, factor)
+        self.pending_target: float | None = None  # in-latency switch target
+        self.want_up: float | None = None   # cap-deferred clock-up target
+        self.waiting = False                # cap-deferred block launch
+        self.finish_s = 0.0
+        self.n_switches = 0
+        self.switch_energy_j = 0.0
+        self.migrated_in = 0
+        self.migrated_out = 0
+        self.migrate_stuck = False  # last migration attempt left a miss
+
+
+class ClusterRuntime:
+    """One simulation run: build, then ``run()`` exactly once."""
+
+    def __init__(
+        self,
+        plan: ClusterPlanArrays | ClusterPlan,
+        truth: BlockArrays,
+        *,
+        config: RuntimeConfig = RuntimeConfig(),
+        events=(),
+        est_blocks=None,
+    ):
+        plan_obj = plan if isinstance(plan, ClusterPlan) else None
+        cpa = plan.to_arrays() if isinstance(plan, ClusterPlan) else plan
+        if not isinstance(truth, BlockArrays):
+            truth = BlockArrays.from_blocks(truth)
+        self.plan = cpa
+        self.config = config
+        self.deadline_s = cpa.deadline_s
+
+        # truth lookup: global block index -> position in the truth arrays
+        self._t_order = np.argsort(truth.index, kind="stable")
+        self._t_sorted = truth.index[self._t_order]
+        self._t_est = truth.est_time_fmax
+        self._t_util = truth.util
+        self._t_roof = truth.roofline
+
+        self.nodes: list = []
+        self._id_of: dict = {}
+        for k, npa in enumerate(cpa.node_plans):
+            st = _NodeState(npa.node, k, npa.plan.index, npa.plan.rel_freq)
+            self.nodes.append(st)
+            self._id_of[npa.node.name] = k
+
+        for ev in events:
+            if isinstance(ev, FaultEvent):
+                continue  # queued at run() start
+            # block-boundary slowdown: sort per node by (after_block, factor)
+            # — the total order that makes same-trigger events input-order
+            # independent (the old loop applied them in input order)
+            self.nodes[self._id_of[ev.node]].slow_events.append(
+                (ev.after_block, ev.factor))
+        for st in self.nodes:
+            st.slow_events.sort()
+        self._fault_events = tuple(ev for ev in events
+                                   if isinstance(ev, FaultEvent))
+
+        self.controller = None
+        if config.online:
+            if plan_obj is None:
+                plan_obj = cpa.to_cluster_plan()
+            est = est_blocks if est_blocks is not None else truth.to_blocks()
+            self.controller = OnlineReplanner(
+                plan_obj, est, replan_threshold=config.replan_threshold,
+                ewma_alpha=config.ewma_alpha,
+                error_margin=config.error_margin)
+
+        idle = [st.spec.power.p_idle for st in self.nodes]
+        if config.power_cap_w is not None \
+                and sum(idle) > config.power_cap_w + 1e-9:
+            raise ValueError(
+                f"power cap {config.power_cap_w} W is below the cluster's "
+                f"idle floor {sum(idle)} W — nothing can run")
+        self.ledger = PowerLedger(idle, config.power_cap_w,
+                                  record=config.log_events)
+        self.queue = EventQueue()
+        self.log: list = []
+        self.migrations: list = []
+        self._ran = False
+
+    # --- truth costs (bitwise-identical to the scalar block_time path) ------
+    def _truth_pos(self, index: int) -> int:
+        j = int(np.searchsorted(self._t_sorted, index))
+        if j >= len(self._t_sorted) or self._t_sorted[j] != index:
+            raise KeyError(f"no true block with index {index}")
+        return int(self._t_order[j])
+
+    def _true_time(self, pos: int, node: _NodeState, rel_freq: float) -> float:
+        """``NodeSpec.block_time`` on the truth arrays, op-for-op."""
+        est = float(self._t_est[pos])
+        if self._t_roof is not None and bool(self._t_roof.has[pos]):
+            t_comp = float(self._t_roof.t_comp[pos])
+            t_mem = float(self._t_roof.t_mem[pos])
+            t_coll = float(self._t_roof.t_coll[pos])
+            t_fixed = float(self._t_roof.t_fixed[pos])
+            f = max(rel_freq, 1e-6)
+            at_f = max(t_comp / f, t_mem, t_coll) + t_fixed
+            at_1 = max(t_comp / 1.0, t_mem, t_coll) + t_fixed
+            base = at_f * (est / max(at_1, 1e-12))
+        else:
+            base = est / max(rel_freq, 1e-6)
+        return base / node.spec.speed
+
+    # --- event handlers ------------------------------------------------------
+    def _log(self, time: float, kind: int, node: _NodeState, *data) -> None:
+        if self.config.log_events:
+            self.log.append((time, KIND_NAMES[kind], node.spec.name) + data)
+
+    def _next_planned(self, st: _NodeState):
+        """(global index, planned freq) of the node's next block, or None."""
+        if self.controller is not None:
+            bp = self.controller.next_block(st.spec.name)
+            return None if bp is None else (bp.index, bp.rel_freq)
+        if st.ptr >= len(st.idx):
+            return None
+        return int(st.idx[st.ptr]), float(st.freq[st.ptr])
+
+    def _count_factor(self, st: _NodeState) -> float:
+        factor = 1.0
+        for after_block, fac in st.slow_events:
+            if st.done >= after_block:
+                factor *= fac
+        return factor
+
+    def _highest_fitting(self, st: _NodeState, util: float,
+                         ceiling: float) -> float | None:
+        """Highest ladder state <= ceiling whose draw fits under the cap."""
+        for f in reversed(st.spec.ladder.states):
+            if f > ceiling + 1e-12:
+                continue
+            if self.ledger.fits(st.nid, st.spec.power.power(util, f)):
+                return f
+        return None
+
+    def _charge_switch(self, st: _NodeState) -> None:
+        st.n_switches += 1
+        st.switch_energy_j += self.config.actuation.switch_energy_j
+
+    def _start_block(self, now: float, st: _NodeState) -> None:
+        if st.inflight is not None:
+            return  # stale start (e.g. a power-release retry while busy)
+        nxt = self._next_planned(st)
+        if nxt is None:
+            return
+        index, planned = nxt
+        pos = self._truth_pos(index)
+        util = float(self._t_util[pos])
+        latency = self.config.actuation.latency_s
+
+        # launch frequency: instant actuation runs the plan directly; with
+        # latency the hardware is still at its previous frequency and the
+        # switch toward the plan lands mid-block
+        desired = planned
+        f_launch = desired if latency == 0.0 or st.hw_freq is None \
+            else st.hw_freq
+
+        # cluster power cap: clamp the launch down the ladder, or defer the
+        # whole launch until a finish/down-switch frees headroom
+        f_run = f_launch
+        if self.ledger.cap_w is not None:
+            f_run = self._highest_fitting(st, util, f_launch)
+            if f_run is None:
+                st.waiting = True
+                self._log(now, BLOCK_START, st, "deferred", index)
+                return
+        st.waiting = False
+
+        if st.hw_freq is not None and f_run != st.hw_freq:
+            self._charge_switch(st)     # boundary transition (0 J by default)
+        st.hw_freq = f_run
+
+        eff = self._count_factor(st) * st.fault_factor
+        t_full = self._true_time(pos, st, f_run) * eff
+        fl = InFlight(block_pos=pos, block_index=index, rel_freq=f_run,
+                      seg_start=now, seg_time=t_full, freqs=(f_run,))
+        st.inflight = fl
+        self.ledger.set_draw(st.nid, st.spec.power.power(util, f_run), now)
+        self._log(now, BLOCK_START, st, index, f_run)
+        self.queue.push(Event(now + t_full, BLOCK_FINISH, st.nid,
+                              (index, fl.generation)))
+
+        # off-plan launch: bring the block toward its planned frequency.
+        # A cap-clamped launch that wants to go UP must stagger (retry on
+        # power release); anything else is an async switch request that
+        # lands ``latency`` later (mid-block when latency > 0).
+        if abs(f_run - desired) > 1e-12:
+            if desired > f_run and f_run < f_launch - 1e-12:
+                st.want_up = desired
+            else:
+                st.pending_target = desired
+                self.queue.push(Event(now + latency, FREQ_SWITCH, st.nid,
+                                      (desired,)))
+
+    def _finish_block(self, now: float, st: _NodeState, data: tuple) -> None:
+        index, generation = data
+        fl = st.inflight
+        if fl is None or fl.block_index != index \
+                or fl.generation != generation:
+            return  # stale finish: the remainder was re-priced after this
+        util = float(self._t_util[fl.block_pos])
+        # the final segment's duration is its scheduled seg_time, not the
+        # clock difference — keeps single-segment blocks bitwise identical
+        # to the block-boundary loop (busy += t with the same t)
+        block_busy = fl.busy_s + fl.seg_time
+        block_energy = fl.energy_j + st.spec.power.busy_energy(
+            fl.seg_time, fl.rel_freq, util=util)
+        st.busy_s += block_busy
+        st.energy_j += block_energy
+        st.freqs.append(fl.rel_freq)
+        st.done += 1
+        st.finish_s = now
+        st.inflight = None
+        st.want_up = None   # a cap-deferred clock-up dies with its block
+        if self.controller is None:
+            st.ptr += 1
+        self.ledger.set_idle(st.nid, now)
+        self._log(now, BLOCK_FINISH, st, index, block_busy, block_energy)
+        self._power_released(now)
+        if self.controller is not None:
+            self.queue.push(Event(now, TELEMETRY, st.nid, (index, block_busy)))
+        self.queue.push(Event(now, BLOCK_START, st.nid))
+
+    def _telemetry(self, now: float, st: _NodeState, data: tuple) -> None:
+        index, observed_s = data
+        replanned = self.controller.on_telemetry(st.spec.name, observed_s)
+        self._log(now, TELEMETRY, st, index, observed_s, replanned)
+        if not self.config.migrate:
+            return
+        # the O(queue) miss prediction runs only when something moved: a
+        # fresh re-plan, or an infeasible node whose LAST attempt still
+        # placed blocks — targets don't gain capacity between re-plans, so
+        # an attempt that could not cure the miss stays stuck until the
+        # next re-plan re-arms it
+        if replanned:
+            st.migrate_stuck = False
+        if st.migrate_stuck or (not replanned
+                                and self.controller.node_feasible(
+                                    st.spec.name)):
+            return
+        margin = self.config.error_margin
+        if not self.controller.predicted_miss(st.spec.name, margin=margin):
+            return
+        moves = plan_moves(self.controller, st.spec.name, now, margin=margin,
+                           max_moves=self.config.max_moves)
+        st.migrate_stuck = self.controller.predicted_miss(st.spec.name,
+                                                          margin=margin)
+        for mv in moves:
+            self.migrations.append(mv)
+            st.migrated_out += 1
+            dst = self.nodes[self._id_of[mv.dst]]
+            dst.migrated_in += 1
+            self._log(now, TELEMETRY, st, "migrate", mv.block_index, mv.dst)
+            if dst.inflight is None:
+                # a drained (or deferred) target got work: wake it
+                self.queue.push(Event(now, BLOCK_START, dst.nid))
+
+    def _freq_switch(self, now: float, st: _NodeState, data: tuple) -> None:
+        target = data[0]
+        if st.pending_target is None or \
+                abs(st.pending_target - target) > 1e-12:
+            return  # stale request (superseded or block already finished)
+        st.pending_target = None
+        fl = st.inflight
+        if fl is None:
+            # landed between blocks: the hardware settles at the target
+            if st.hw_freq != target:
+                st.hw_freq = target
+                self._charge_switch(st)
+                self._log(now, FREQ_SWITCH, st, target, "idle")
+            return
+        util = float(self._t_util[fl.block_pos])
+        new_f = target
+        if self.ledger.cap_w is not None:
+            new_f = self._highest_fitting(st, util, target)
+            if target > fl.rel_freq and \
+                    (new_f is None or new_f <= fl.rel_freq + 1e-12):
+                st.want_up = target   # stagger: retry on power release
+                return
+            if new_f is None or abs(new_f - fl.rel_freq) <= 1e-12:
+                return                # nothing to change
+        old_f = fl.rel_freq
+        if new_f < target - 1e-12:
+            st.want_up = target   # partial climb: resume on power release
+        fl.split_at(now, st.spec.power, util)
+        fl.rel_freq = new_f
+        fl.freqs = fl.freqs + (new_f,)
+        st.hw_freq = new_f
+        eff = self._count_factor(st) * st.fault_factor
+        fl.seg_time = fl.remaining * (
+            self._true_time(fl.block_pos, st, new_f) * eff)
+        fl.generation += 1
+        self._charge_switch(st)
+        self.ledger.set_draw(st.nid, st.spec.power.power(util, new_f), now)
+        self._log(now, FREQ_SWITCH, st, fl.block_index, old_f, new_f)
+        self.queue.push(Event(now + fl.seg_time, BLOCK_FINISH, st.nid,
+                              (fl.block_index, fl.generation)))
+        if new_f < old_f:
+            self._power_released(now)
+
+    def _fault(self, now: float, st: _NodeState, data: tuple) -> None:
+        factor = data[0]
+        st.fault_factor *= factor
+        self._log(now, FAULT, st, factor)
+        fl = st.inflight
+        if fl is None:
+            return
+        util = float(self._t_util[fl.block_pos])
+        fl.split_at(now, st.spec.power, util)
+        eff = self._count_factor(st) * st.fault_factor
+        fl.seg_time = fl.remaining * (
+            self._true_time(fl.block_pos, st, fl.rel_freq) * eff)
+        fl.generation += 1
+        self.queue.push(Event(now + fl.seg_time, BLOCK_FINISH, st.nid,
+                              (fl.block_index, fl.generation)))
+
+    def _power_released(self, now: float) -> None:
+        """Cap headroom appeared: wake deferred launches, stagger clock-ups.
+
+        Deterministic order: node id ascending; launches re-enter through
+        BLOCK_START events (kind priority puts them after every same-time
+        switch), clock-ups re-request through FREQ_SWITCH events.
+        """
+        if self.ledger.cap_w is None:
+            return
+        latency = self.config.actuation.latency_s
+        for st in self.nodes:
+            if st.waiting and st.inflight is None:
+                st.waiting = False
+                self.queue.push(Event(now, BLOCK_START, st.nid))
+            elif st.inflight is not None and st.want_up is not None \
+                    and st.pending_target is None:
+                util = float(self._t_util[st.inflight.block_pos])
+                f = self._highest_fitting(st, util, st.want_up)
+                if f is not None and f > st.inflight.rel_freq + 1e-12:
+                    target = st.want_up
+                    st.want_up = None
+                    st.pending_target = target
+                    self.queue.push(Event(now + latency, FREQ_SWITCH,
+                                          st.nid, (target,)))
+
+    # --- main loop -----------------------------------------------------------
+    def run(self) -> RuntimeReport:
+        if self._ran:
+            raise RuntimeError("a ClusterRuntime instance runs exactly once")
+        self._ran = True
+        for st in self.nodes:
+            self.queue.push(Event(0.0, BLOCK_START, st.nid))
+        for fe in self._fault_events:
+            self.queue.push(Event(fe.time, FAULT, self._id_of[fe.node],
+                                  (fe.factor,)))
+        # BLOCK_START carries no data, so it dispatches separately
+        handlers = {
+            BLOCK_FINISH: self._finish_block,
+            TELEMETRY: self._telemetry,
+            FREQ_SWITCH: self._freq_switch,
+            FAULT: self._fault,
+        }
+        while self.queue:
+            ev = self.queue.pop()
+            st = self.nodes[ev.node]
+            if ev.kind == BLOCK_START:
+                self._start_block(ev.time, st)
+            else:
+                handlers[ev.kind](ev.time, st, ev.data)
+        return self._report()
+
+    def _report(self) -> RuntimeReport:
+        node_reports = tuple(
+            NodeRuntimeReport(st.spec.name, st.busy_s, st.energy_j, st.done,
+                              tuple(st.freqs), st.finish_s, st.n_switches,
+                              st.switch_energy_j, st.migrated_in,
+                              st.migrated_out)
+            for st in self.nodes)
+        makespan = max((nr.finish_s for nr in node_reports), default=0.0)
+        idle = sum(max(self.deadline_s - nr.busy_s, 0.0)
+                   * st.spec.power.p_idle
+                   for nr, st in zip(node_reports, self.nodes))
+        # a run only meets the deadline if it actually ran everything — a
+        # power cap that permanently defers launches (or any other stall)
+        # must not report an empty run as an on-time success
+        planned = sum(len(npa.plan.index) for npa in self.plan.node_plans)
+        complete = sum(st.done for st in self.nodes) == planned
+        return RuntimeReport(
+            planner=self.plan.planner,
+            deadline_s=self.deadline_s,
+            makespan_s=makespan,
+            total_energy_j=float(sum(nr.energy_j for nr in node_reports)),
+            idle_energy_j=float(idle),
+            deadline_met=complete and makespan <= self.deadline_s + 1e-9,
+            node_reports=node_reports,
+            n_replans=(self.controller.total_replans
+                       if self.controller else 0),
+            n_migrations=len(self.migrations),
+            n_switches=sum(nr.n_switches for nr in node_reports),
+            switch_energy_j=float(sum(nr.switch_energy_j
+                                      for nr in node_reports)),
+            peak_power_w=self.ledger.peak_w,
+            power_cap_w=self.ledger.cap_w,
+            migrations=tuple(self.migrations),
+            event_log=tuple(self.log),
+        )
+
+
+def run_cluster(
+    plan: ClusterPlanArrays | ClusterPlan,
+    truth,
+    *,
+    config: RuntimeConfig = RuntimeConfig(),
+    events=(),
+    est_blocks=None,
+) -> RuntimeReport:
+    """Execute ``plan`` against true block costs on the event-driven runtime.
+
+    ``truth`` is a ``BlockArrays`` (streamed-pipeline native) or a
+    ``Sequence[BlockInfo]``; ``events`` mixes block-boundary
+    ``SlowdownEvent``s and time-based ``FaultEvent``s; ``est_blocks`` seeds
+    the online controller's base predictions when they differ from truth.
+    """
+    return ClusterRuntime(plan, truth, config=config, events=events,
+                          est_blocks=est_blocks).run()

@@ -1,0 +1,105 @@
+"""Event layer of the cluster runtime: typed events + a totally ordered queue.
+
+The block-boundary simulator could only act when a block finished; the
+runtime advances a single discrete-event clock instead, so frequency
+switches, faults, telemetry, and block boundaries interleave freely.  For
+the whole engine to be reproducible the *pop order* must be a pure function
+of the event set — two events are never "simultaneous and unordered".
+Every event is keyed by
+
+    (time, kind priority, node id, seq)
+
+``seq`` is a per-queue monotonically increasing push counter, so even two
+identical events on the same node at the same instant pop in the order they
+were scheduled.  Kind priorities encode the physical settling order at one
+timestamp:
+
+    BLOCK_FINISH   a finishing block releases its power draw and frees the
+                   node *before* anything else at this instant reacts;
+    FREQ_SWITCH    pending actuations land on the settled power state;
+    FAULT          slowdown factors change before new work is priced;
+    TELEMETRY      the controller observes a fully settled node, so its
+                   re-plan (and any migration) sees post-fault truth;
+    BLOCK_START    new work starts last, seeing every decision above.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+__all__ = [
+    "BLOCK_FINISH", "FREQ_SWITCH", "FAULT", "TELEMETRY", "BLOCK_START",
+    "KIND_NAMES", "Event", "FaultEvent", "EventQueue",
+]
+
+# kind priorities — the tie-break order at one timestamp (see module doc)
+BLOCK_FINISH = 0
+FREQ_SWITCH = 1
+FAULT = 2
+TELEMETRY = 3
+BLOCK_START = 4
+
+KIND_NAMES = {
+    BLOCK_FINISH: "block_finish",
+    FREQ_SWITCH: "freq_switch",
+    FAULT: "fault",
+    TELEMETRY: "telemetry",
+    BLOCK_START: "block_start",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One scheduled occurrence.  ``data`` is kind-specific:
+
+    BLOCK_FINISH  (block_index, generation) — generation guards stale
+                  finishes after a mid-block re-split (switch or fault);
+    FREQ_SWITCH   (target_rel_freq,) — requested earlier, lands now;
+    FAULT         (factor,) — the node's truth times multiply by ``factor``
+                  from this instant (in-flight remainder included);
+    TELEMETRY     (block_index, observed_s) — a finished block's wall time;
+    BLOCK_START   () — the node should (try to) start its next queued block.
+    """
+
+    time: float
+    kind: int
+    node: int           # node id (position in the plan's node order)
+    data: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """Time-based fault for the runtime: from ``time`` on, ``node``'s true
+    processing times multiply by ``factor`` — mid-block included (the
+    in-flight block's *remaining work* is re-priced at the fault instant).
+
+    The block-boundary ``SlowdownEvent`` (count-based trigger) remains the
+    compatibility form; ``simulate_cluster`` translates it for the engine.
+    """
+
+    time: float
+    node: str
+    factor: float
+
+
+class EventQueue:
+    """Min-heap over ``(time, kind, node, seq)`` — a total order, so pop
+    order is deterministic for any push order of distinct events, and
+    scheduling order breaks the (rare) exact ties between identical keys."""
+
+    def __init__(self):
+        self._heap: list = []
+        self._seq = 0
+
+    def push(self, ev: Event) -> None:
+        heapq.heappush(self._heap, (ev.time, ev.kind, ev.node, self._seq, ev))
+        self._seq += 1
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)[4]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

@@ -1,0 +1,118 @@
+"""Cross-node block migration — when clocking up to f_max cannot recover.
+
+The online re-planner's only lever is frequency: a straggler node clocks its
+tail up to f_max and hopes.  When even f_max misses the deadline (severe
+slowdown, tight budget), the work itself has to move.  DV-ARPA's variety
+argument applies unchanged: block cost skew is *data*, so the recovery is a
+data re-placement, not a re-clock.
+
+Policy (deterministic, SoA-native):
+
+  trigger   the engine invokes ``plan_moves`` at a straggler's telemetry
+            event whenever the controller predicts a miss even at f_max
+            (``OnlineReplanner.predicted_miss``).  The straggler has just
+            finished a block, so *everything* in its queue is queued, never
+            in-flight; targets only receive appended work, so their
+            in-flight heads are untouched either.
+
+  what      queued blocks in LPT order — ``np.lexsort((index, -base_est))``,
+            literally the keys ``assign_block_arrays`` sorts by — largest
+            first, ties to the lower block index.
+
+  where     the node with the most predicted slack (deadline minus its
+            drift-corrected predicted finish), ties to the lower node id.
+            A move is taken only if the target *stays* feasible with the
+            block priced at the target's f_max and drift — a previously
+            feasible node can never be pushed over its deadline (invariant
+            (c) of ``tests/test_runtime.py``).
+
+  then      moves repeat until the straggler's f_max prediction fits (or
+            nothing movable helps); one final tail re-plan lets the
+            straggler spread whatever slack the moves bought.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["MigrationRecord", "plan_moves"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationRecord:
+    """One applied move (engine stamps the event time)."""
+
+    time: float
+    block_index: int
+    src: str
+    dst: str
+    src_pred_fmax_s: float   # straggler's f_max prediction BEFORE the move
+    dst_pred_s: float        # target's predicted finish AFTER the move
+
+
+def plan_moves(controller, straggler: str, now: float,
+               *, margin: float = 0.0, max_moves: int | None = None) -> list:
+    """Apply migration moves on ``controller`` state; returns the records.
+
+    Mutates the controller's queues via ``move_blocks`` and finishes with
+    one ``replan_node`` on the straggler when anything moved.  ``margin``
+    reserves a fraction of the deadline on the STRAGGLER's stop test only —
+    its drift EWMA converges from below during a slowdown, so a zero-margin
+    prediction flatters it exactly when the decision matters.  The target
+    guard compares against the raw deadline: targets are priced at their
+    own (converged) drift, and a reserve there would refuse recoveries a
+    tight deadline still allows.  Deterministic: block order is the LPT key
+    sort, target order is (slack desc, node id asc), and every quantity
+    read is controller state — no clocks, no RNG.
+    """
+    names = controller.node_names()
+    budget = controller.deadline_s * (1.0 - margin)
+    dst_budget = controller.deadline_s
+    if not controller.predicted_miss(straggler, margin=margin):
+        return []
+    queue = controller.queued(straggler)
+    if not queue:
+        return []
+    est = np.array([controller.base_est(bp.index) for bp in queue])
+    idx = np.array([bp.index for bp in queue], dtype=np.int64)
+    order = np.lexsort((idx, -est))  # assign_block_arrays' LPT keys
+
+    # one O(queue) pass with incrementally maintained predictions: targets'
+    # predicted finishes only GROW as moves land and the straggler's only
+    # shrinks, so a block that fits no target now never fits later — the
+    # single largest-first sweep decides exactly what the move-at-a-time
+    # loop would, at a scan apiece instead of a scan per move
+    src_pred = controller.predicted_finish(straggler, at_fmax=True)
+    # a target's prediction is busy-time based (elapsed + queued); a node
+    # that drained and idled reports a finish in the past, but migrated
+    # work cannot start before NOW — clamp, or a late trigger would pass
+    # the guard on wall-clock-stale slack and push a previously-feasible
+    # node past the deadline
+    pred = {nm: max(controller.predicted_finish(nm), now)
+            for nm in names if nm != straggler}
+    node_id = {nm: k for k, nm in enumerate(names)}
+    moves: list = []
+    for p in order.tolist():
+        if src_pred <= budget + 1e-9:
+            break
+        if max_moves is not None and len(moves) >= max_moves:
+            break
+        bp = queue[p]
+        # targets: most predicted slack first, ties to the lower node id
+        for nm in sorted(pred, key=lambda nm: (pred[nm], node_id[nm])):
+            # invariant guard: the target must stay inside the deadline
+            # with the block priced at ITS f_max under ITS drift
+            t_add = controller.predicted_block_time(nm, bp.index)
+            if pred[nm] + t_add <= dst_budget + 1e-9:
+                pred[nm] += t_add
+                moves.append(MigrationRecord(now, int(bp.index), straggler,
+                                             nm, src_pred, pred[nm]))
+                src_pred -= controller.predicted_block_time(straggler,
+                                                            bp.index)
+                break
+    if moves:
+        controller.move_blocks(straggler,
+                               [(mv.block_index, mv.dst) for mv in moves])
+        controller.replan_node(straggler)
+    return moves

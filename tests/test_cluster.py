@@ -140,3 +140,73 @@ def test_node_spec_validation():
         NodeSpec("bad", speed=0.0)
     with pytest.raises(ValueError):
         assign_blocks([BlockInfo(0, 1.0)], _nodes(), strategy="nope")
+
+
+def test_replan_hysteresis_exact_threshold_edge():
+    """Drift landing EXACTLY on the threshold must not trigger a re-plan —
+    the hysteresis gate is strict — while one step beyond must."""
+    from repro.cluster import OnlineReplanner
+    est = [BlockInfo(i, 5.0) for i in range(8)]
+    nodes = _nodes(speeds=(1.0,))
+    plan = plan_cluster(est, nodes, 5.0 * 8 * 2.0, assignment="lpt")
+    ctl = OnlineReplanner(plan, est, replan_threshold=0.5, ewma_alpha=0.5)
+    bp = ctl.next_block("n0")
+    base = nodes[0].block_time(est[bp.index], bp.rel_freq)
+    # first observation seeds the EWMA: drift == 1.5, rel change == 0.5
+    assert ctl.observe("n0", base * 1.5) is False
+    assert ctl.total_replans == 0
+    # constant drift: the EWMA holds, still exactly at the threshold
+    bp = ctl.next_block("n0")
+    base = nodes[0].block_time(est[bp.index], bp.rel_freq)
+    assert ctl.observe("n0", base * 1.5) is False
+    assert ctl.total_replans == 0
+    # one step past the edge: the gate opens
+    bp = ctl.next_block("n0")
+    base = nodes[0].block_time(est[bp.index], bp.rel_freq)
+    assert ctl.observe("n0", base * 2.6) is True
+    assert ctl.total_replans == 1
+
+
+def test_replan_recovery_does_not_oscillate():
+    """Slowdown then full recovery (2x, then x0.5 back to true speed): the
+    controller corrects up once and relaxes back down at most once — the
+    frequency trace has no flip-flop."""
+    blocks = [BlockInfo(i, 5.0) for i in range(16)]
+    nodes = _nodes(speeds=(1.0,), ladder=DEEP_LADDER)
+    deadline = 5.0 * 16 * 1.9
+    plan = plan_cluster(blocks, nodes, deadline, assignment="lpt")
+    events = [SlowdownEvent("n0", after_block=3, factor=2.0),
+              SlowdownEvent("n0", after_block=9, factor=0.5)]
+    rep = simulate_cluster(plan, blocks, online=True, events=events,
+                           ewma_alpha=0.7, replan_threshold=0.1)
+    assert rep.deadline_met
+    nr = rep.node_reports[0]
+    # direction changes in the frequency trace: up once (slowdown), down
+    # once (recovery) — any third change is an oscillation
+    dirs = [np.sign(b - a) for a, b in zip(nr.freqs, nr.freqs[1:])
+            if abs(b - a) > 1e-9]
+    changes = sum(1 for a, b in zip(dirs, dirs[1:]) if a != b)
+    assert changes <= 2, nr.freqs
+    # bounded corrections, not one per block
+    assert 1 <= rep.n_replans <= 4
+
+
+def test_slowdown_event_ties_are_input_order_invariant():
+    """Two+ SlowdownEvents with the same trigger used to apply in input
+    order, silently deciding the FP product; they now apply in the total
+    order (after_block, factor), so any input permutation simulates
+    identically — on the engine and on the reference loop."""
+    from repro.cluster import simulate_cluster_reference
+    blocks = _zipf_blocks(n=12, seed=3)
+    nodes = _nodes(speeds=(1.0, 0.8))
+    plan = plan_cluster(blocks, nodes,
+                        _rr_fmax_makespan(blocks, nodes) * 1.6)
+    evs = [SlowdownEvent("n0", 2, 1.1), SlowdownEvent("n0", 2, 1.3),
+           SlowdownEvent("n0", 2, 1.7), SlowdownEvent("n1", 1, 1.2)]
+    perms = [evs, evs[::-1], [evs[2], evs[0], evs[3], evs[1]]]
+    reports = [simulate_cluster(plan, blocks, events=p) for p in perms]
+    refs = [simulate_cluster_reference(plan, blocks, events=p)
+            for p in perms]
+    assert reports[0] == reports[1] == reports[2]
+    assert refs[0] == refs[1] == refs[2]
+    assert reports[0] == refs[0]  # and the engine matches the loop oracle
