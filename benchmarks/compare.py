@@ -3,13 +3,20 @@
 Usage::
 
     python -m benchmarks.compare OLD.json NEW.json [--threshold 0.2]
+        [--section-threshold SECTION=FRAC ...]
 
 Every row (dict) inside every section list that carries a ``blocks_per_s``
 metric is keyed by its section plus identifying fields (n, deadline,
 planner, ...).  A key present in both files whose NEW throughput fell more
-than ``threshold`` below OLD is a regression: they are printed and the
+than its threshold below OLD is a regression: they are printed and the
 process exits 1 (CI-friendly).  Keys present in only one file are reported
 but never fail the diff — sections come and go as benchmarks evolve.
+
+Thresholds are per section: ``SECTION_THRESHOLDS`` carries defaults for
+sections whose rows are noisier than raw planner throughput (the runtime
+and calibrate smokes run whole event-driven simulations per row), the
+``--threshold`` flag covers everything unnamed, and repeatable
+``--section-threshold calibrate=0.4`` overrides win over both.
 
 Blobs carry a ``schema_version`` stamp (``benchmarks.run.SCHEMA_VERSION``)
 plus the producing ``git_sha``; two blobs with different schema versions
@@ -25,7 +32,14 @@ import sys
 METRIC = "blocks_per_s"
 _ID_FIELDS = ("n", "deadline", "planner", "scenario", "app", "z", "nodes",
               "sampler_blocks", "kernel_blocks", "token_blocks",
-              "cluster_blocks", "fault", "mode", "cap")
+              "cluster_blocks", "fault", "mode", "cap", "noise", "perturb")
+
+# per-section defaults, overriding --threshold: event-driven simulation
+# rows (one full engine run each) wobble more than pure planner throughput
+SECTION_THRESHOLDS = {
+    "runtime": 0.3,
+    "calibrate": 0.3,
+}
 
 
 def collect(blob: dict) -> dict:
@@ -47,10 +61,33 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("old")
     ap.add_argument("new")
-    ap.add_argument("--threshold", type=float, default=0.2,
-                    help="max tolerated fractional throughput drop "
-                         "(default 0.2 = 20%%)")
+    ap.add_argument("--threshold", type=float, default=None,
+                    help="max tolerated fractional throughput drop for "
+                         "every section (default 0.2 = 20%%); passing it "
+                         "explicitly overrides the built-in per-section "
+                         "defaults too")
+    ap.add_argument("--section-threshold", action="append", default=[],
+                    metavar="SECTION=FRAC",
+                    help="per-section override, repeatable "
+                         "(e.g. calibrate=0.4); wins over built-in "
+                         "SECTION_THRESHOLDS and --threshold")
     args = ap.parse_args(argv)
+
+    # precedence: --section-threshold > explicit --threshold > built-in
+    # per-section defaults > the 20% fallback
+    explicit = args.threshold is not None
+    default_threshold = args.threshold if explicit else 0.2
+    section_thresholds = {} if explicit else dict(SECTION_THRESHOLDS)
+    for spec in args.section_threshold:
+        name, _, frac = spec.partition("=")
+        try:
+            value = float(frac)
+        except ValueError:
+            value = -1.0
+        if not name or not 0.0 <= value <= 1.0:
+            ap.error(f"--section-threshold needs SECTION=FRAC with FRAC in "
+                     f"[0, 1], got {spec!r}")
+        section_thresholds[name] = value
 
     with open(args.old) as f:
         old_blob = json.load(f)
@@ -75,11 +112,12 @@ def main(argv=None) -> int:
     regressions = []
     for key in shared:
         o, n = old[key], new[key]
+        threshold = section_thresholds.get(key[0], default_threshold)
         change = (n - o) / o if o > 0 else 0.0
         tag = ""
-        if o > 0 and n < o * (1.0 - args.threshold):
-            regressions.append((key, o, n, change))
-            tag = "  <-- REGRESSION"
+        if o > 0 and n < o * (1.0 - threshold):
+            regressions.append((key, o, n, change, threshold))
+            tag = f"  <-- REGRESSION (>{threshold:.0%})"
         name = key[0] + "/" + ",".join(f"{k}={v}" for k, v in key[1:])
         print(f"{name}: {o:,.0f} -> {n:,.0f} blocks/s "
               f"({change:+.1%}){tag}")
@@ -88,11 +126,11 @@ def main(argv=None) -> int:
         print(f"# {side}: {key[0]}/"
               + ",".join(f"{k}={v}" for k, v in key[1:]))
     if regressions:
-        print(f"\n{len(regressions)} regression(s) beyond "
-              f"{args.threshold:.0%} threshold")
+        print(f"\n{len(regressions)} regression(s) beyond their section "
+              f"thresholds")
         return 1
-    print(f"\nok: no regression beyond {args.threshold:.0%} "
-          f"across {len(shared)} rows")
+    print(f"\nok: no regression beyond the per-section thresholds "
+          f"(default {default_threshold:.0%}) across {len(shared)} rows")
     return 0
 
 

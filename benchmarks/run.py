@@ -24,6 +24,11 @@ Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).  Sections:
              tightness, with a 10k-block fault+migration+cap smoke row;
              asserts migration recovers a deadline f_max alone misses and
              the cap trades deadline slack for lower peak power
+  calibrate — telemetry-driven calibration (repro.calibrate): fit
+             round-trip across trace noise × length (asserted tolerances),
+             calibrated-vs-default planning across ground-truth model
+             perturbation (asserts dominance at ≥10% deviation), online
+             recalibration determinism, 10k-block loop smoke
   roofline — summary of results/roofline_sp.json (built from the dry-run)
   train    — tiny end-to-end LM training with the DV-DVFS controller
   serve    — batched decode with roofline-planned windows
@@ -603,6 +608,216 @@ def bench_runtime():
     return rows
 
 
+def bench_calibrate(quick: bool = False):
+    """Telemetry-driven calibration (repro.calibrate): the
+    estimate->plan->measure loop.
+
+    Three sub-grids:
+
+      * fit round-trip — synthetic traces from known ground truth across
+        trace noise x trace length: the fitters must recover
+        ``(p_idle, p_full, alpha)`` / node speed / ``(cost_per_record,
+        mem_fraction)`` within a documented, noise-scaled tolerance
+        (asserted — the row fails loudly on a drifting fitter).
+      * calibrated vs default — ground-truth model perturbation x trace
+        noise: the default-constant plan runs on mis-modeled hardware
+        (``run_cluster(..., true_nodes=...)``), its emitted trace is
+        fitted, and the calibrated re-plan must DOMINATE the default plan
+        whenever the truth deviates >= 10% (deadline met where the default
+        misses, or strictly lower busy energy at equal deadline); at zero
+        perturbation the two plans must coincide.
+      * 10k-block smoke — the full loop at scale (plan, traced run, batch
+        refit, re-plan, re-run) with a wall ceiling CI guards; an online
+        leg asserts two-run determinism of mid-run recalibration.
+    """
+    import numpy as np
+
+    from repro.calibrate import (OnlineCalibrator, TraceRecorder,
+                                 calibrate_nodes, fit_cost_model,
+                                 fit_node_speeds, fit_power_model,
+                                 synthetic_trace)
+    from repro.cluster import NodeSpec, plan_cluster
+    from repro.core import BlockInfo, FrequencyLadder, zipf_block_sizes
+    from repro.core.energy import PowerModel
+    from repro.runtime import RuntimeConfig, run_cluster
+
+    deep = FrequencyLadder(
+        states=tuple(round(f, 2) for f in np.arange(0.35, 1.001, 0.05)))
+    rows = []
+
+    # --- fit round-trip: noise x trace length -------------------------------
+    truth_power = PowerModel(p_full=230.0, p_idle=80.0, alpha=2.0)
+    truth_speed = 0.8
+    lengths = (50, 200) if quick else (50, 200, 800)
+    for n in lengths:
+        for noise in (0.0, 0.02, 0.05):
+            t0 = time.perf_counter()
+            tr = synthetic_trace("n0", truth_power, speed=truth_speed,
+                                 n_samples=n, noise=noise, seed=11)
+            pf = fit_power_model(tr)
+            sf = fit_node_speeds(tr)["n0"]
+            wall = time.perf_counter() - t0
+            err_pi = abs(pf.p_idle / truth_power.p_idle - 1)
+            err_pf = abs(pf.p_full / truth_power.p_full - 1)
+            err_a = abs(pf.alpha - truth_power.alpha)
+            err_sp = abs(sf.speed / truth_speed - 1)
+            # documented tolerance: grid resolution at zero noise, scaling
+            # with noise/sqrt(n) like any LS estimate
+            tol = max(0.015, 5.0 * noise * np.sqrt(200.0 / n))
+            tol_a = max(0.03, 12.0 * noise * np.sqrt(200.0 / n))
+            assert max(err_pi, err_pf) < tol, (n, noise, pf)
+            assert err_a < tol_a, (n, noise, pf)
+            assert err_sp < max(1e-6, 2.0 * noise), (n, noise, sf)
+            rows.append({"scenario": "fit_roundtrip", "n": n, "noise": noise,
+                         "err_p_idle": err_pi, "err_p_full": err_pf,
+                         "err_alpha": err_a, "err_speed": err_sp,
+                         "fit_wall_s": wall})
+            _row(f"calibrate_fit_n{n}_noise{noise:g}", wall * 1e6,
+                 f"err_p={max(err_pi, err_pf):.4f};err_alpha={err_a:.4f};"
+                 f"err_speed={err_sp:.5f};tol={tol:.3f}")
+
+    # cost-model round-trip (per-app record cost + memory-bound fraction)
+    rng = np.random.default_rng(5)
+    rec_counts = rng.integers(100, 1000, 150).astype(float)
+    freqs = rng.choice(np.arange(0.5, 1.001, 0.1), 150)
+    c_true, beta_true = 0.004, 0.35
+    walls = rec_counts * c_true * np.maximum((1 - beta_true) / freqs, 1.0)
+    walls *= 1 + 0.02 * rng.standard_normal(150)
+    cf = fit_cost_model(rec_counts, freqs, walls)
+    assert abs(cf.cost_per_record / c_true - 1) < 0.05
+    assert abs(cf.mem_fraction - beta_true) < 0.05
+    rows.append({"scenario": "cost_roundtrip",
+                 "err_cost": abs(cf.cost_per_record / c_true - 1),
+                 "err_mem_fraction": abs(cf.mem_fraction - beta_true)})
+    _row("calibrate_cost_fit", 0.0,
+         f"cost={cf.cost_per_record:.5f};mem_frac={cf.mem_fraction:.3f};"
+         f"true=({c_true},{beta_true})")
+
+    # --- calibrated vs default: perturbation x trace noise ------------------
+    def scenario(perturb, n_blocks=60, seed=0):
+        rng = np.random.default_rng(seed)
+        blocks = [BlockInfo(i, float(c), util=float(u)) for i, (c, u) in
+                  enumerate(zip(rng.lognormal(1.0, 0.5, n_blocks),
+                                rng.uniform(0.6, 1.0, n_blocks)))]
+        believed = [NodeSpec(f"n{k}", speed=1.0, ladder=deep)
+                    for k in range(3)]
+        sp = (1.0 - perturb, 1.0 + perturb, 1.0 + perturb / 2)
+        true = [NodeSpec(f"n{k}", speed=sp[k], ladder=deep,
+                         power=PowerModel(
+                             p_full=200.0 * (1 + perturb),
+                             p_idle=70.0 * (1 - perturb / 2),
+                             alpha=2.4 * (1 - perturb / 3)))
+                for k in range(3)]
+        deadline = sum(b.est_time_fmax for b in blocks) / 3 * 1.6
+        return blocks, believed, true, deadline
+
+    def jitter(trace, noise, seed=0):
+        """Measurement noise on a recorded trace (the engine is exact)."""
+        if noise == 0.0:
+            return trace
+        import dataclasses as dc
+        rng = np.random.default_rng(seed)
+        jit = lambda: np.clip(1 + noise * rng.standard_normal(len(trace)),
+                              0.05, None)
+        return dc.replace(trace, dur_s=trace.dur_s * jit(),
+                          energy_j=trace.energy_j * jit())
+
+    for perturb in (0.0, 0.1, 0.2, 0.3):
+        for noise in ((0.0,) if quick else (0.0, 0.03)):
+            blocks, believed, true, deadline = scenario(perturb)
+            plan_def = plan_cluster(blocks, believed, deadline,
+                                    assignment="lpt")
+            recd = TraceRecorder()
+            rep_def = run_cluster(
+                plan_def, blocks,
+                config=RuntimeConfig(trace=recd, log_events=False),
+                true_nodes=true)
+            cal = calibrate_nodes(believed, jitter(recd.trace(), noise))
+            plan_cal = plan_cluster(blocks, cal, deadline, assignment="lpt")
+            rep_cal = run_cluster(plan_cal, blocks,
+                                  config=RuntimeConfig(log_events=False),
+                                  true_nodes=true)
+            imp = rep_cal.improvement_vs(rep_def)
+            if perturb >= 0.10:
+                # acceptance: calibrated strictly dominates once the truth
+                # deviates >= 10% from the constructed constants
+                assert rep_cal.deadline_met, (perturb, noise)
+                assert (not rep_def.deadline_met) or \
+                    rep_cal.total_energy_j < rep_def.total_energy_j - 1e-6, \
+                    (perturb, noise)
+            elif noise == 0.0:
+                # no deviation: the calibrated plan must NOT degrade
+                assert rep_cal.deadline_met == rep_def.deadline_met
+                assert rep_cal.total_energy_j \
+                    <= rep_def.total_energy_j + 1e-6
+            rows.append({"scenario": "calibrated_vs_default",
+                         "perturb": perturb, "noise": noise,
+                         "def_met": rep_def.deadline_met,
+                         "cal_met": rep_cal.deadline_met,
+                         "def_energy_j": rep_def.total_energy_j,
+                         "cal_energy_j": rep_cal.total_energy_j,
+                         "improvement": imp})
+            _row(f"calibrate_replan_p{perturb:g}_noise{noise:g}", 0.0,
+                 f"def_met={rep_def.deadline_met};"
+                 f"cal_met={rep_cal.deadline_met};energy=-{imp:.1%}")
+
+    # --- online recalibration: two-run determinism --------------------------
+    blocks, believed, true, deadline = scenario(0.25)
+    plan = plan_cluster(blocks, believed, deadline, assignment="lpt")
+
+    def run_online():
+        cfg = RuntimeConfig(online=True, calibrator=OnlineCalibrator(),
+                            ewma_alpha=0.5, replan_threshold=0.1)
+        return run_cluster(plan, blocks, config=cfg, est_blocks=blocks,
+                           true_nodes=true)
+
+    r1, r2 = run_online(), run_online()
+    assert r1.event_log == r2.event_log and r1 == r2, \
+        "online recalibration must be two-run deterministic"
+    rows.append({"scenario": "online_determinism", "met": r1.deadline_met,
+                 "replans": r1.n_replans})
+    _row("calibrate_online_determinism", 0.0,
+         f"met={r1.deadline_met};replans={r1.n_replans};identical=True")
+
+    # --- 10k-block calibrated-replan smoke (CI wall ceiling) ----------------
+    n = 10_000
+    rng = np.random.default_rng(7)
+    sizes = zipf_block_sizes(n, 10 * n, z=1.0, seed=7)
+    costs = sizes / sizes.mean() * 5.0
+    blocks = [BlockInfo(i, float(c), util=float(u)) for i, (c, u) in
+              enumerate(zip(costs, rng.uniform(0.6, 1.0, n)))]
+    believed = [NodeSpec(f"n{k}", speed=1.0, ladder=deep) for k in range(5)]
+    sp = (0.75, 1.25, 1.1, 0.9, 1.3)
+    true = [NodeSpec(f"n{k}", speed=sp[k], ladder=deep,
+                     power=PowerModel(240.0, 60.0, 2.0))
+            for k in range(5)]
+    deadline = float(costs.sum()) / 5 * 1.6
+    t0 = time.perf_counter()
+    plan_def = plan_cluster(blocks, believed, deadline,
+                            assignment="round_robin")
+    recd = TraceRecorder()
+    rep_def = run_cluster(plan_def, blocks,
+                          config=RuntimeConfig(trace=recd, log_events=False),
+                          true_nodes=true)
+    cal = calibrate_nodes(believed, recd.trace())
+    plan_cal = plan_cluster(blocks, cal, deadline, assignment="round_robin")
+    rep_cal = run_cluster(plan_cal, blocks,
+                          config=RuntimeConfig(log_events=False),
+                          true_nodes=true)
+    wall = time.perf_counter() - t0
+    imp = rep_cal.improvement_vs(rep_def)
+    assert rep_cal.deadline_met
+    assert (not rep_def.deadline_met) or \
+        rep_cal.total_energy_j < rep_def.total_energy_j
+    rows.append({"scenario": "smoke10k", "n": n, "wall_s": wall,
+                 "blocks_per_s": n / wall, "def_met": rep_def.deadline_met,
+                 "cal_met": rep_cal.deadline_met, "improvement": imp})
+    _row("calibrate_smoke10k", wall * 1e6 / n,
+         f"blocks_per_s={n / wall:,.0f};def_met={rep_def.deadline_met};"
+         f"cal_met={rep_cal.deadline_met};energy=-{imp:.1%}")
+    return rows
+
+
 def bench_roofline():
     out = {}
     for tag, path in (("base", "results/roofline_sp.json"),
@@ -697,6 +912,7 @@ def main() -> None:
         "pipeline": (lambda: bench_pipeline(quick=args.quick), False),
         "cluster": (bench_cluster, False),
         "runtime": (bench_runtime, False),
+        "calibrate": (lambda: bench_calibrate(quick=args.quick), False),
         "roofline": (bench_roofline, False),
         "train": (bench_train, False),
         "serve": (bench_serve, False),

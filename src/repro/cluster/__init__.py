@@ -67,7 +67,7 @@ that engine; the original loop survives as ``simulate_cluster_reference``,
 the bit-for-bit equivalence oracle of ``tests/test_runtime.py``.
 """
 from repro.cluster.controller import OnlineReplanner
-from repro.cluster.node import NodeSpec
+from repro.cluster.node import CalibratedNodeSpec, NodeSpec
 from repro.cluster.planner import (ClusterPlan, ClusterPlanArrays, NodePlan,
                                    NodePlanArrays, assign_block_arrays,
                                    assign_blocks, plan_cluster,
@@ -76,7 +76,7 @@ from repro.cluster.sim import (ClusterReport, NodeReport, SlowdownEvent,
                                simulate_cluster, simulate_cluster_reference)
 
 __all__ = [
-    "NodeSpec",
+    "NodeSpec", "CalibratedNodeSpec",
     "ClusterPlan", "NodePlan", "assign_blocks", "plan_cluster",
     "ClusterPlanArrays", "NodePlanArrays", "assign_block_arrays",
     "plan_cluster_arrays",

@@ -59,12 +59,15 @@ class OnlineReplanner:
 
     def __init__(self, plan: ClusterPlan, est_blocks: Sequence[BlockInfo], *,
                  replan_threshold: float = 0.15, ewma_alpha: float = 0.3,
-                 error_margin: float = 0.05):
+                 error_margin: float = 0.05, calibrator=None):
         self._base = {b.index: b for b in est_blocks}
         self.deadline_s = plan.deadline_s
         self.replan_threshold = replan_threshold
         self.error_margin = error_margin
+        self.ewma_alpha = ewma_alpha
+        self.calibrator = calibrator   # repro.calibrate.OnlineCalibrator
         self.replan_log: list = []
+        self.recalibrations: list = []
         self._nodes: dict = {}
         for np_ in plan.node_plans:
             det = StragglerDetector(alpha=ewma_alpha, warmup_steps=2)
@@ -79,6 +82,16 @@ class OnlineReplanner:
 
     def observe(self, node_name: str, observed_s: float) -> bool:
         """Record the head block's wall time; returns True if we re-planned."""
+        st = self._record(node_name, observed_s)
+        rel_change = abs(st.drift / st.drift_at_replan - 1.0)
+        if st.queue and rel_change > self.replan_threshold:
+            self._replan_node(node_name, st)
+            return True
+        return False
+
+    def _record(self, node_name: str, observed_s: float) -> _NodeState:
+        """Pop the head block, advance elapsed time, update the drift EWMA —
+        the observation WITHOUT the replan decision."""
         st = self._nodes[node_name]
         bp = st.queue.pop(0)
         st.elapsed_s += observed_s
@@ -89,21 +102,58 @@ class OnlineReplanner:
         # planned_slot_s=1.0 makes "late vs budget" mean "ratio >> 1"
         st.detector.observe(st.done, ratio, planned_slot_s=1.0)
         st.drift = max(st.detector.mean, 1e-6)
-        rel_change = abs(st.drift / st.drift_at_replan - 1.0)
-        if st.queue and rel_change > self.replan_threshold:
-            self._replan_node(node_name, st)
-            return True
-        return False
+        return st
 
-    def on_telemetry(self, node_name: str, observed_s: float) -> bool:
+    def on_telemetry(self, node_name: str, observed_s: float,
+                     samples=()) -> bool:
         """Event-driven entry for the runtime engine (``repro.runtime``).
 
         A ``TELEMETRY`` event carries a finished block's wall time; this is
         the same observation ``observe`` consumes in the block-boundary
         loop, delivered through the event queue instead of a per-block
-        callback.  Returns True when the observation triggered a re-plan.
+        callback.  ``samples`` optionally carries the block's counter-trace
+        segments (``repro.calibrate.CounterSample``, one per executed
+        frequency segment); with a calibrator attached they feed the
+        windowed refit, and a model change re-plans the node's tail against
+        the RECALIBRATED spec.  Returns True when the observation triggered
+        a re-plan (drift- or calibration-driven).
         """
-        return self.observe(node_name, observed_s)
+        changed = False
+        if self.calibrator is not None and samples:
+            for s in samples:
+                changed = self.calibrator.add(s) or changed
+        if not changed:
+            return self.observe(node_name, observed_s)
+        # a calibration change supersedes the drift test: record the
+        # observation without observe()'s replan (its plan against the
+        # stale spec would be thrown away one line later), then re-plan
+        # once against the recalibrated spec
+        self._record(node_name, observed_s)
+        self._apply_calibration(node_name)
+        return True
+
+    def _apply_calibration(self, node_name: str) -> None:
+        """Swap the node's spec for the calibrator's current fit and re-plan.
+
+        The fitted speed already absorbs the slowdown the drift EWMA was
+        tracking (both are fitted on the same observed walls against the
+        same base estimates), so drift resets to 1.0 — leaving it in place
+        would apply the correction twice.  The detector restarts so the
+        fresh EWMA tracks residual drift against the NEW spec.
+        """
+        st = self._nodes[node_name]
+        st.spec = self.calibrator.calibrated_spec(node_name, st.spec)
+        st.detector = StragglerDetector(alpha=self.ewma_alpha,
+                                        warmup_steps=2)
+        st.drift = 1.0
+        st.drift_at_replan = 1.0
+        self.recalibrations.append({
+            "node": node_name, "after_block": st.done,
+            "speed": st.spec.speed,
+            "power": (st.spec.power.p_idle, st.spec.power.p_full,
+                      st.spec.power.alpha)})
+        if st.queue:
+            self._replan_node(node_name, st)
 
     @property
     def total_replans(self) -> int:

@@ -13,7 +13,7 @@ import dataclasses
 from repro.core.energy import DEFAULT_LADDER, TPU_V5E_POWER, FrequencyLadder, PowerModel
 from repro.core.scheduler import BlockInfo, block_time
 
-__all__ = ["NodeSpec"]
+__all__ = ["NodeSpec", "CalibratedNodeSpec"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,3 +44,25 @@ class NodeSpec:
                      rel_freq: float) -> float:
         """Busy-only energy (paper formula 7) for ``seconds`` on this node."""
         return self.power.busy_energy(seconds, rel_freq, util=block.util)
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibratedNodeSpec(NodeSpec):
+    """A ``NodeSpec`` whose speed/power were FITTED from a counter trace
+    (``repro.calibrate``) instead of constructed from constants.
+
+    Behaviourally identical to ``NodeSpec`` — every planner and the runtime
+    engine accept it wherever a node spec goes — but it keeps the fit
+    provenance so reports and re-calibration decisions can see what the
+    numbers rest on.  Build via ``repro.calibrate.calibrate_nodes`` (or
+    ``plan_cluster(..., calibration=trace)``); ``power_fit``/``speed_fit``
+    are ``repro.calibrate.fit`` result objects (either may be None when the
+    trace could only identify one half).
+    """
+
+    power_fit: object | None = None   # calibrate.fit.PowerFit
+    speed_fit: object | None = None   # calibrate.fit.SpeedFit
+
+    @property
+    def calibrated(self) -> bool:
+        return self.power_fit is not None or self.speed_fit is not None

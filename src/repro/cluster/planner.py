@@ -363,6 +363,7 @@ def plan_cluster_arrays(
     assignment="auto",
     error_margin: float = 0.05,
     power_cap_w: float | None = None,
+    calibration=None,
 ) -> ClusterPlanArrays:
     """``plan_cluster`` over SoA input — the streamed-pipeline entry.
 
@@ -378,9 +379,18 @@ def plan_cluster_arrays(
     inside the deadline and under the cap (``power_cap_ok`` carries the
     cap verdict separately).  The runtime engine enforces the same cap
     instant-by-instant at execution (``repro.runtime``).
+
+    ``calibration`` accepts a measured ``repro.calibrate.CounterTrace``:
+    every node whose speed/power the trace can identify is upgraded to a
+    fitted ``CalibratedNodeSpec`` before planning (see
+    ``repro.calibrate.calibrate_nodes``) — the estimate->plan->measure
+    loop's re-entry point.
     """
     if not nodes:
         raise ValueError("need at least one node")
+    if calibration is not None:
+        from repro.calibrate.fit import calibrate_nodes
+        nodes = calibrate_nodes(nodes, calibration)
     if isinstance(assignment, str) and assignment == "auto":
         candidates = [plan_cluster_arrays(ba, nodes, deadline_s, assignment=s,
                                           error_margin=error_margin,
@@ -471,6 +481,7 @@ def plan_cluster(
     assignment="auto",
     error_margin: float = 0.05,
     power_cap_w: float | None = None,
+    calibration=None,
 ) -> "ClusterPlan | ClusterPlanArrays":
     """Assign blocks to nodes and greedily down-clock across the cluster.
 
@@ -481,7 +492,9 @@ def plan_cluster(
     baseline's own round-robin split.
 
     ``power_cap_w`` screens the plan against a cluster-wide instantaneous
-    power cap (see ``plan_cluster_arrays``).
+    power cap (see ``plan_cluster_arrays``); ``calibration`` accepts a
+    measured ``repro.calibrate.CounterTrace`` and plans against fitted
+    ``CalibratedNodeSpec``s instead of the constructed constants.
 
     SoA path: passing a ``BlockArrays`` (e.g. estimates streamed by
     ``repro.pipeline``) returns a ``ClusterPlanArrays`` instead — same
@@ -491,13 +504,15 @@ def plan_cluster(
         return plan_cluster_arrays(blocks, nodes, deadline_s,
                                    assignment=assignment,
                                    error_margin=error_margin,
-                                   power_cap_w=power_cap_w)
+                                   power_cap_w=power_cap_w,
+                                   calibration=calibration)
     # the object path IS the SoA path (same assignment, same stacked tables,
     # same greedy) — a thin wrapper, so the two cannot diverge
     return plan_cluster_arrays(BlockArrays.from_blocks(blocks), nodes,
                                deadline_s, assignment=assignment,
                                error_margin=error_margin,
-                               power_cap_w=power_cap_w).to_cluster_plan()
+                               power_cap_w=power_cap_w,
+                               calibration=calibration).to_cluster_plan()
 
 
 def plan_cluster_reference(

@@ -50,6 +50,24 @@ class PowerModel:
     p_idle: float = 70.0
     alpha: float = 2.4
 
+    def __post_init__(self):
+        # A degenerate model (p_full <= p_idle, or a non-positive exponent)
+        # makes busy energy non-monotone in the wrong direction: down-clocks
+        # then SAVE negative energy, which silently flips the greedy's ΔE
+        # sign and turns "lowest feasible frequency" into "highest".  Refuse
+        # at construction instead of mis-planning later.
+        if self.p_idle <= 0 or self.p_full <= 0:
+            raise ValueError(
+                f"power levels must be positive, got p_full={self.p_full}, "
+                f"p_idle={self.p_idle}")
+        if self.p_full <= self.p_idle:
+            raise ValueError(
+                f"p_full ({self.p_full}) must exceed p_idle ({self.p_idle})"
+                " — busy power below idle would make down-clocking cost"
+                " negative energy")
+        if self.alpha <= 0:
+            raise ValueError(f"alpha must be positive, got {self.alpha}")
+
     def power(self, util: float, rel_freq: float = 1.0) -> float:
         """Chip power (W) at utilization ``util`` and relative frequency ``rel_freq``."""
         util = float(np.clip(util, 0.0, 1.0))

@@ -34,12 +34,12 @@ from repro.runtime.actuator import ActuationModel, PowerLedger
 from repro.runtime.engine import (ClusterRuntime, NodeRuntimeReport,
                                   RuntimeConfig, RuntimeReport, run_cluster)
 from repro.runtime.events import Event, EventQueue, FaultEvent
-from repro.runtime.migrate import MigrationRecord, plan_moves
+from repro.runtime.migrate import MigrationModel, MigrationRecord, plan_moves
 
 __all__ = [
     "ActuationModel", "PowerLedger",
     "ClusterRuntime", "NodeRuntimeReport", "RuntimeConfig", "RuntimeReport",
     "run_cluster",
     "Event", "EventQueue", "FaultEvent",
-    "MigrationRecord", "plan_moves",
+    "MigrationModel", "MigrationRecord", "plan_moves",
 ]

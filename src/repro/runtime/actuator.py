@@ -69,6 +69,10 @@ class InFlight:
     busy_s: float = 0.0     # closed segments' seconds
     energy_j: float = 0.0   # closed segments' joules
     freqs: tuple = ()       # per-segment frequencies, in order
+    # closed segments as (start, dur_s, rel_freq, work_frac, energy_j) —
+    # what the engine's trace emission turns into CounterSamples; one short
+    # tuple per applied mid-block transition, cleared with the block
+    seg_log: list = dataclasses.field(default_factory=list)
 
     def split_at(self, now: float, power, util: float) -> None:
         """Close the current segment at ``now`` (switch/fault landing).
@@ -82,8 +86,11 @@ class InFlight:
             raise ValueError("segment cannot close before it started")
         done_frac = self.remaining * (elapsed / self.seg_time) \
             if self.seg_time > 0 else self.remaining
+        seg_energy = power.busy_energy(elapsed, self.rel_freq, util=util)
         self.busy_s += elapsed
-        self.energy_j += power.busy_energy(elapsed, self.rel_freq, util=util)
+        self.energy_j += seg_energy
+        self.seg_log.append((self.seg_start, elapsed, self.rel_freq,
+                             done_frac, seg_energy))
         self.remaining = max(self.remaining - done_frac, 0.0)
         self.seg_start = now
 

@@ -40,6 +40,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.calibrate.trace import CounterSample
 from repro.cluster.controller import OnlineReplanner
 from repro.cluster.planner import ClusterPlan, ClusterPlanArrays
 from repro.core.soa import BlockArrays
@@ -47,7 +48,7 @@ from repro.runtime.actuator import ActuationModel, InFlight, PowerLedger
 from repro.runtime.events import (BLOCK_FINISH, BLOCK_START, FAULT,
                                   FREQ_SWITCH, KIND_NAMES, TELEMETRY, Event,
                                   EventQueue, FaultEvent)
-from repro.runtime.migrate import plan_moves
+from repro.runtime.migrate import MigrationModel, plan_moves
 
 __all__ = ["RuntimeConfig", "NodeRuntimeReport", "RuntimeReport",
            "ClusterRuntime", "run_cluster"]
@@ -60,17 +61,30 @@ class RuntimeConfig:
     online: bool = False               # feedback re-planning (OnlineReplanner)
     migrate: bool = False              # cross-node migration (implies online)
     actuation: ActuationModel = ActuationModel()
+    migration: MigrationModel = MigrationModel()  # per-move transfer cost
     power_cap_w: float | None = None   # cluster-wide instantaneous cap
     max_moves: int | None = None       # migration moves per trigger (None=all)
     replan_threshold: float = 0.15     # controller knobs (as simulate_cluster)
     ewma_alpha: float = 0.3
     error_margin: float = 0.05
     log_events: bool = True
+    # STATEFUL sinks, unlike every other field: the recorder accumulates
+    # samples and the calibrator keeps warm fit windows across calls.
+    # Reusing one config object across runs therefore mixes their state
+    # (trace() spans both runs; the second run starts pre-calibrated) —
+    # intentional for continual calibration, but for a clean per-run trace
+    # or two-run-identical event logs, construct fresh ones per run.
+    trace: object | None = None        # calibrate.TraceRecorder sink
+    calibrator: object | None = None   # calibrate.OnlineCalibrator
 
     def __post_init__(self):
         if self.migrate and not self.online:
             raise ValueError("migration needs the online controller "
                              "(RuntimeConfig(online=True, migrate=True))")
+        if self.calibrator is not None and not self.online:
+            raise ValueError("online calibration needs the online "
+                             "controller (RuntimeConfig(online=True, "
+                             "calibrator=...))")
         if self.power_cap_w is not None and self.power_cap_w <= 0:
             raise ValueError("power_cap_w must be positive")
 
@@ -119,14 +133,15 @@ class RuntimeReport:
 class _NodeState:
     """Mutable per-node runtime state (one per plan node)."""
 
-    __slots__ = ("spec", "nid", "idx", "freq", "ptr", "done", "busy_s",
-                 "energy_j", "freqs", "inflight", "hw_freq", "fault_factor",
-                 "slow_events", "pending_target", "want_up", "waiting",
-                 "finish_s", "n_switches", "switch_energy_j", "migrated_in",
-                 "migrated_out", "migrate_stuck")
+    __slots__ = ("spec", "true_spec", "nid", "idx", "freq", "ptr", "done",
+                 "busy_s", "energy_j", "freqs", "inflight", "hw_freq",
+                 "fault_factor", "slow_events", "pending_target", "want_up",
+                 "waiting", "finish_s", "n_switches", "switch_energy_j",
+                 "migrated_in", "migrated_out", "migrate_stuck")
 
     def __init__(self, spec, nid: int, idx: np.ndarray, freq: np.ndarray):
         self.spec = spec
+        self.true_spec = spec     # hardware truth (overridden by true_nodes)
         self.nid = nid
         self.idx = idx            # static queue: global block indices
         self.freq = freq          # static queue: planned frequencies
@@ -161,6 +176,7 @@ class ClusterRuntime:
         config: RuntimeConfig = RuntimeConfig(),
         events=(),
         est_blocks=None,
+        true_nodes=None,
     ):
         plan_obj = plan if isinstance(plan, ClusterPlan) else None
         cpa = plan.to_arrays() if isinstance(plan, ClusterPlan) else plan
@@ -184,6 +200,26 @@ class ClusterRuntime:
             self.nodes.append(st)
             self._id_of[npa.node.name] = k
 
+        # hardware truth per node: the plan's specs are the planner's BELIEF
+        # (what frequencies were chosen against); ``true_nodes`` is what the
+        # machines actually are — time prices off the true speed, energy and
+        # the power ledger off the true power model.  Default: belief ==
+        # truth, which keeps the engine bit-for-bit on the compat path.
+        if true_nodes is not None:
+            by_name = {nd.name: nd for nd in true_nodes} \
+                if not isinstance(true_nodes, dict) else dict(true_nodes)
+            for st in self.nodes:
+                st.true_spec = by_name.get(st.spec.name, st.spec)
+
+        # planner-unit work lookup for trace emission: the estimates the
+        # plan was built from (fitted speeds are then EFFECTIVE speeds
+        # w.r.t. those estimates — see repro.calibrate.trace)
+        self._work_est = ({b.index: b.est_time_fmax for b in est_blocks}
+                          if est_blocks is not None else None)
+        self._emit_trace = config.trace is not None \
+            or config.calibrator is not None
+        self._mig_ready: dict = {}   # block index -> earliest start on dst
+
         for ev in events:
             if isinstance(ev, FaultEvent):
                 continue  # queued at run() start
@@ -205,9 +241,10 @@ class ClusterRuntime:
             self.controller = OnlineReplanner(
                 plan_obj, est, replan_threshold=config.replan_threshold,
                 ewma_alpha=config.ewma_alpha,
-                error_margin=config.error_margin)
+                error_margin=config.error_margin,
+                calibrator=config.calibrator)
 
-        idle = [st.spec.power.p_idle for st in self.nodes]
+        idle = [st.true_spec.power.p_idle for st in self.nodes]
         if config.power_cap_w is not None \
                 and sum(idle) > config.power_cap_w + 1e-9:
             raise ValueError(
@@ -228,7 +265,12 @@ class ClusterRuntime:
         return int(self._t_order[j])
 
     def _true_time(self, pos: int, node: _NodeState, rel_freq: float) -> float:
-        """``NodeSpec.block_time`` on the truth arrays, op-for-op."""
+        """``NodeSpec.block_time`` on the truth arrays, op-for-op.
+
+        Priced off the node's TRUE spec: with ``true_nodes`` the plan's
+        frequencies were chosen against a belief, but the hardware runs at
+        its actual speed — the gap is exactly what calibration closes.
+        """
         est = float(self._t_est[pos])
         if self._t_roof is not None and bool(self._t_roof.has[pos]):
             t_comp = float(self._t_roof.t_comp[pos])
@@ -241,7 +283,7 @@ class ClusterRuntime:
             base = at_f * (est / max(at_1, 1e-12))
         else:
             base = est / max(rel_freq, 1e-6)
-        return base / node.spec.speed
+        return base / node.true_spec.speed
 
     # --- event handlers ------------------------------------------------------
     def _log(self, time: float, kind: int, node: _NodeState, *data) -> None:
@@ -270,7 +312,7 @@ class ClusterRuntime:
         for f in reversed(st.spec.ladder.states):
             if f > ceiling + 1e-12:
                 continue
-            if self.ledger.fits(st.nid, st.spec.power.power(util, f)):
+            if self.ledger.fits(st.nid, st.true_spec.power.power(util, f)):
                 return f
         return None
 
@@ -285,6 +327,14 @@ class ClusterRuntime:
         if nxt is None:
             return
         index, planned = nxt
+        if self._mig_ready:
+            # a migrated head block is still on the wire: sleep until the
+            # transfer completes (duplicate wakeups are harmless — the
+            # first launch wins, later ones see the node busy)
+            ready = self._mig_ready.get(index)
+            if ready is not None and ready > now + 1e-12:
+                self.queue.push(Event(ready, BLOCK_START, st.nid))
+                return
         pos = self._truth_pos(index)
         util = float(self._t_util[pos])
         latency = self.config.actuation.latency_s
@@ -316,7 +366,8 @@ class ClusterRuntime:
         fl = InFlight(block_pos=pos, block_index=index, rel_freq=f_run,
                       seg_start=now, seg_time=t_full, freqs=(f_run,))
         st.inflight = fl
-        self.ledger.set_draw(st.nid, st.spec.power.power(util, f_run), now)
+        self.ledger.set_draw(st.nid, st.true_spec.power.power(util, f_run),
+                             now)
         self._log(now, BLOCK_START, st, index, f_run)
         self.queue.push(Event(now + t_full, BLOCK_FINISH, st.nid,
                               (index, fl.generation)))
@@ -343,9 +394,13 @@ class ClusterRuntime:
         # the final segment's duration is its scheduled seg_time, not the
         # clock difference — keeps single-segment blocks bitwise identical
         # to the block-boundary loop (busy += t with the same t)
-        block_busy = fl.busy_s + fl.seg_time
-        block_energy = fl.energy_j + st.spec.power.busy_energy(
+        final_energy = st.true_spec.power.busy_energy(
             fl.seg_time, fl.rel_freq, util=util)
+        block_busy = fl.busy_s + fl.seg_time
+        block_energy = fl.energy_j + final_energy
+        samples = ()
+        if self._emit_trace:
+            samples = self._emit_samples(st, fl, index, util, final_energy)
         st.busy_s += block_busy
         st.energy_j += block_energy
         st.freqs.append(fl.rel_freq)
@@ -359,12 +414,34 @@ class ClusterRuntime:
         self._log(now, BLOCK_FINISH, st, index, block_busy, block_energy)
         self._power_released(now)
         if self.controller is not None:
-            self.queue.push(Event(now, TELEMETRY, st.nid, (index, block_busy)))
+            self.queue.push(Event(now, TELEMETRY, st.nid,
+                                  (index, block_busy, samples)))
         self.queue.push(Event(now, BLOCK_START, st.nid))
 
+    def _emit_samples(self, st: _NodeState, fl: InFlight, index: int,
+                      util: float, final_energy: float) -> tuple:
+        """The finished block as counter-trace samples, one per segment
+        (``repro.calibrate.trace`` format): closed segments from the
+        in-flight log plus the final one.  ``work_done`` is in planner
+        units — the estimate the plan was built from — scaled by each
+        segment's completed work fraction."""
+        work = float(self._work_est[index]) if self._work_est is not None \
+            else float(self._t_est[fl.block_pos])
+        name = st.spec.name
+        segs = fl.seg_log + [(fl.seg_start, fl.seg_time, fl.rel_freq,
+                              fl.remaining, final_energy)]
+        samples = tuple(
+            CounterSample(t=t0, dur_s=dur, node=name, freq=f, util=util,
+                          energy_j=e, work_done=frac * work)
+            for t0, dur, f, frac, e in segs)
+        if self.config.trace is not None:
+            self.config.trace.extend(samples)
+        return samples
+
     def _telemetry(self, now: float, st: _NodeState, data: tuple) -> None:
-        index, observed_s = data
-        replanned = self.controller.on_telemetry(st.spec.name, observed_s)
+        index, observed_s, samples = data
+        replanned = self.controller.on_telemetry(st.spec.name, observed_s,
+                                                 samples=samples)
         self._log(now, TELEMETRY, st, index, observed_s, replanned)
         if not self.config.migrate:
             return
@@ -383,7 +460,8 @@ class ClusterRuntime:
         if not self.controller.predicted_miss(st.spec.name, margin=margin):
             return
         moves = plan_moves(self.controller, st.spec.name, now, margin=margin,
-                           max_moves=self.config.max_moves)
+                           max_moves=self.config.max_moves,
+                           migration=self.config.migration)
         st.migrate_stuck = self.controller.predicted_miss(st.spec.name,
                                                           margin=margin)
         for mv in moves:
@@ -391,6 +469,9 @@ class ClusterRuntime:
             st.migrated_out += 1
             dst = self.nodes[self._id_of[mv.dst]]
             dst.migrated_in += 1
+            if mv.ready_s > now + 1e-12:
+                # transfer latency: the block may not launch before ready_s
+                self._mig_ready[mv.block_index] = mv.ready_s
             self._log(now, TELEMETRY, st, "migrate", mv.block_index, mv.dst)
             if dst.inflight is None:
                 # a drained (or deferred) target got work: wake it
@@ -423,7 +504,7 @@ class ClusterRuntime:
         old_f = fl.rel_freq
         if new_f < target - 1e-12:
             st.want_up = target   # partial climb: resume on power release
-        fl.split_at(now, st.spec.power, util)
+        fl.split_at(now, st.true_spec.power, util)
         fl.rel_freq = new_f
         fl.freqs = fl.freqs + (new_f,)
         st.hw_freq = new_f
@@ -432,7 +513,8 @@ class ClusterRuntime:
             self._true_time(fl.block_pos, st, new_f) * eff)
         fl.generation += 1
         self._charge_switch(st)
-        self.ledger.set_draw(st.nid, st.spec.power.power(util, new_f), now)
+        self.ledger.set_draw(st.nid, st.true_spec.power.power(util, new_f),
+                             now)
         self._log(now, FREQ_SWITCH, st, fl.block_index, old_f, new_f)
         self.queue.push(Event(now + fl.seg_time, BLOCK_FINISH, st.nid,
                               (fl.block_index, fl.generation)))
@@ -447,7 +529,7 @@ class ClusterRuntime:
         if fl is None:
             return
         util = float(self._t_util[fl.block_pos])
-        fl.split_at(now, st.spec.power, util)
+        fl.split_at(now, st.true_spec.power, util)
         eff = self._count_factor(st) * st.fault_factor
         fl.seg_time = fl.remaining * (
             self._true_time(fl.block_pos, st, fl.rel_freq) * eff)
@@ -515,7 +597,7 @@ class ClusterRuntime:
             for st in self.nodes)
         makespan = max((nr.finish_s for nr in node_reports), default=0.0)
         idle = sum(max(self.deadline_s - nr.busy_s, 0.0)
-                   * st.spec.power.p_idle
+                   * st.true_spec.power.p_idle
                    for nr, st in zip(node_reports, self.nodes))
         # a run only meets the deadline if it actually ran everything — a
         # power cap that permanently defers launches (or any other stall)
@@ -550,6 +632,7 @@ def run_cluster(
     config: RuntimeConfig = RuntimeConfig(),
     events=(),
     est_blocks=None,
+    true_nodes=None,
 ) -> RuntimeReport:
     """Execute ``plan`` against true block costs on the event-driven runtime.
 
@@ -557,6 +640,14 @@ def run_cluster(
     ``Sequence[BlockInfo]``; ``events`` mixes block-boundary
     ``SlowdownEvent``s and time-based ``FaultEvent``s; ``est_blocks`` seeds
     the online controller's base predictions when they differ from truth.
+    ``true_nodes`` (sequence or name-keyed mapping of ``NodeSpec``) is the
+    HARDWARE truth when it differs from the specs the plan was built
+    against — the mis-modeled-hardware scenario ``repro.calibrate`` closes:
+    time prices off the true speeds, energy and the power ledger off the
+    true power models, while the plan (and the online controller's belief)
+    keep the planner's specs.  With ``config.trace`` /
+    ``config.calibrator`` set, the actuator path emits one counter sample
+    per executed block segment into the recorder / the windowed refit.
     """
     return ClusterRuntime(plan, truth, config=config, events=events,
-                          est_blocks=est_blocks).run()
+                          est_blocks=est_blocks, true_nodes=true_nodes).run()

@@ -57,7 +57,9 @@ class Event:
     FREQ_SWITCH   (target_rel_freq,) — requested earlier, lands now;
     FAULT         (factor,) — the node's truth times multiply by ``factor``
                   from this instant (in-flight remainder included);
-    TELEMETRY     (block_index, observed_s) — a finished block's wall time;
+    TELEMETRY     (block_index, observed_s, samples) — a finished block's
+                  wall time plus its counter-trace segments (empty tuple
+                  unless trace emission is on);
     BLOCK_START   () — the node should (try to) start its next queued block.
     """
 

@@ -36,7 +36,28 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["MigrationRecord", "plan_moves"]
+__all__ = ["MigrationModel", "MigrationRecord", "plan_moves"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationModel:
+    """What moving one queued block between nodes costs.
+
+    ``latency_s_per_block`` is the transfer latency: a moved block cannot
+    START on its destination until ``move time + latency`` (the engine
+    defers its launch), and ``plan_moves`` weighs the same latency in its
+    gain test — a destination only accepts a block if it stays inside the
+    deadline with the block arriving late.  The default (0) keeps moves
+    free, bit-compatible with the pre-model behaviour.  ROADMAP's full
+    "data size aware transfer energy" model remains open; this is the
+    down payment that makes migration stop looking free.
+    """
+
+    latency_s_per_block: float = 0.0
+
+    def __post_init__(self):
+        if self.latency_s_per_block < 0:
+            raise ValueError("migration latency must be >= 0")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,10 +70,12 @@ class MigrationRecord:
     dst: str
     src_pred_fmax_s: float   # straggler's f_max prediction BEFORE the move
     dst_pred_s: float        # target's predicted finish AFTER the move
+    ready_s: float = 0.0     # earliest start on dst (time + transfer latency)
 
 
 def plan_moves(controller, straggler: str, now: float,
-               *, margin: float = 0.0, max_moves: int | None = None) -> list:
+               *, margin: float = 0.0, max_moves: int | None = None,
+               migration: "MigrationModel | None" = None) -> list:
     """Apply migration moves on ``controller`` state; returns the records.
 
     Mutates the controller's queues via ``move_blocks`` and finishes with
@@ -62,11 +85,16 @@ def plan_moves(controller, straggler: str, now: float,
     prediction flatters it exactly when the decision matters.  The target
     guard compares against the raw deadline: targets are priced at their
     own (converged) drift, and a reserve there would refuse recoveries a
-    tight deadline still allows.  Deterministic: block order is the LPT key
-    sort, target order is (slack desc, node id asc), and every quantity
-    read is controller state — no clocks, no RNG.
+    tight deadline still allows.  ``migration`` charges the transfer cost
+    in the gain test: a moved block cannot start on its target before
+    ``now + latency``, so a target whose queue would drain before the
+    block arrives pays the gap — moves that only fit when free are
+    refused.  Deterministic: block order is the LPT key sort, target order
+    is (slack desc, node id asc), and every quantity read is controller
+    state — no clocks, no RNG.
     """
     names = controller.node_names()
+    latency = migration.latency_s_per_block if migration is not None else 0.0
     budget = controller.deadline_s * (1.0 - margin)
     dst_budget = controller.deadline_s
     if not controller.predicted_miss(straggler, margin=margin):
@@ -102,12 +130,16 @@ def plan_moves(controller, straggler: str, now: float,
         # targets: most predicted slack first, ties to the lower node id
         for nm in sorted(pred, key=lambda nm: (pred[nm], node_id[nm])):
             # invariant guard: the target must stay inside the deadline
-            # with the block priced at ITS f_max under ITS drift
+            # with the block priced at ITS f_max under ITS drift, AND the
+            # block arriving no earlier than now + transfer latency (a
+            # drained target waits for the wire, it cannot time-travel)
             t_add = controller.predicted_block_time(nm, bp.index)
-            if pred[nm] + t_add <= dst_budget + 1e-9:
-                pred[nm] += t_add
+            arrival = max(pred[nm], now + latency)
+            if arrival + t_add <= dst_budget + 1e-9:
+                pred[nm] = arrival + t_add
                 moves.append(MigrationRecord(now, int(bp.index), straggler,
-                                             nm, src_pred, pred[nm]))
+                                             nm, src_pred, pred[nm],
+                                             ready_s=now + latency))
                 src_pred -= controller.predicted_block_time(straggler,
                                                             bp.index)
                 break

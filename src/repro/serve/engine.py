@@ -39,6 +39,11 @@ class ServeConfig:
     # physically in this process; the others are accounted analytically.
     replicas: int = 1
     replica_speeds: tuple = ()  # relative host speeds, default all-1.0
+    # full per-replica specs — ``NodeSpec`` / calibrated
+    # ``CalibratedNodeSpec`` (repro.calibrate), one per replica: speeds AND
+    # per-replica power models/ladders flow into the window plan.  Takes
+    # precedence over ``replica_speeds``.
+    replica_nodes: tuple = ()
 
 
 class ServingEngine:
@@ -101,13 +106,17 @@ class ServingEngine:
         consistent unit choice valid.
         """
         sc = self.sc
-        if not sc.replica_speeds:
+        if sc.replica_nodes:
+            source = "replica_nodes"
+            speeds = tuple(float(nd.speed) for nd in sc.replica_nodes)
+        elif sc.replica_speeds:
+            source = "replica_speeds"
+            speeds = tuple(float(s) for s in sc.replica_speeds)
+        else:
             return (1.0,) * sc.replicas
-        speeds = tuple(float(s) for s in sc.replica_speeds)
         if len(speeds) != sc.replicas:
-            raise ValueError(
-                f"replica_speeds has {len(speeds)} entries for "
-                f"{sc.replicas} replicas")
+            raise ValueError(f"{source} has {len(speeds)} entries for "
+                             f"{sc.replicas} replicas")
         return tuple(s / speeds[0] for s in speeds)
 
     def _plan_replicas(self, n_windows: int, window_fmax_s: float,
@@ -126,8 +135,15 @@ class ServingEngine:
                             roofline=self.actuator.roofline)
                   for r in range(sc.replicas) for w in range(n_windows)]
         assignment = [r for r in range(sc.replicas) for _ in range(n_windows)]
-        nodes = [NodeSpec(f"replica{r}", speed=speeds[r])
-                 for r in range(sc.replicas)]
+        if sc.replica_nodes:
+            # calibrated path: keep each replica's own power model/ladder
+            # (and fit provenance), re-normalized so replica 0 — where the
+            # window cost was MEASURED — is the speed reference
+            nodes = [dataclasses.replace(nd, speed=speeds[r])
+                     for r, nd in enumerate(sc.replica_nodes)]
+        else:
+            nodes = [NodeSpec(f"replica{r}", speed=speeds[r])
+                     for r in range(sc.replicas)]
         self.cluster_plan = plan_cluster(blocks, nodes, deadline,
                                          assignment=assignment)
         rep0 = self.cluster_plan.node_plans[0]
