@@ -46,7 +46,7 @@ import time
 
 # bumped whenever row shapes / section semantics change incompatibly;
 # benchmarks.compare refuses to diff blobs whose schemas differ
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 
 def _git_sha() -> str:
@@ -608,6 +608,105 @@ def bench_runtime():
     return rows
 
 
+def bench_engine(quick: bool = False):
+    """Vectorized vs scalar event engine (repro.runtime.vector).
+
+    The everything-on scenario — faults, migration with wire energy, a
+    cluster power cap, online recalibration — at fleet scale:
+
+      * 100k blocks x 16 nodes: both engines run the identical scenario;
+        the row asserts the vectorized report EQUALS the scalar oracle's
+        (the bit-identity contract from tests/test_runtime_vector.py,
+        re-checked here at a scale the test sweep never reaches).
+      * 1M blocks x 100 nodes (skipped by --quick): plan + vectorized run
+        end-to-end; the scalar oracle is not run at this scale.
+    """
+    import numpy as np
+
+    from repro.cluster import NodeSpec
+    from repro.cluster.planner import plan_cluster_arrays
+    from repro.core import FrequencyLadder, PowerModel
+    from repro.core.soa import BlockArrays
+    from repro.runtime import (ActuationModel, FaultEvent, MigrationModel,
+                               RuntimeConfig, run_cluster)
+
+    def scenario(n_blocks, n_nodes, speed_step):
+        rng = np.random.default_rng(0)
+        est = rng.uniform(0.2, 2.0, n_blocks)
+        blocks = BlockArrays.build(
+            est, util=rng.uniform(0.5, 1.0, n_blocks),
+            records=rng.integers(100, 2000, n_blocks).astype(float))
+        ladder = FrequencyLadder((0.6, 0.8, 1.0))
+        nodes = [NodeSpec(f"n{k}", ladder=ladder,
+                          power=PowerModel(p_idle=40.0, p_full=160.0,
+                                           alpha=2.0),
+                          speed=1.0 + speed_step * k)
+                 for k in range(n_nodes)]
+        deadline = float(est.sum()) / n_nodes * 1.15
+        events = [FaultEvent(time=deadline * 0.2, node="n3", factor=1.4),
+                  FaultEvent(time=deadline * 0.5, node="n7", factor=1.3)]
+        cfg = RuntimeConfig(
+            online=True, migrate=True, actuation=ActuationModel(),
+            migration=MigrationModel(latency_s_per_block=1.0,
+                                     energy_j_per_record=0.001),
+            power_cap_w=n_nodes * 40.0 + 0.9 * n_nodes * 120.0,
+            log_events=False)
+        return blocks, nodes, deadline, events, cfg
+
+    rows = []
+
+    # --- 100k x 16: vector vs the scalar oracle, same scenario --------------
+    n, k = 100_000, 16
+    blocks, nodes, deadline, events, cfg = scenario(n, k, 0.02)
+    plan = plan_cluster_arrays(blocks, nodes, deadline_s=deadline)
+    walls = {}
+    reps = {}
+    for engine in ("vector", "scalar"):
+        t0 = time.perf_counter()
+        reps[engine] = run_cluster(plan, blocks, config=cfg, events=events,
+                                   engine=engine)
+        walls[engine] = time.perf_counter() - t0
+        rows.append({"scenario": "equiv100k", "n": n, "nodes": k,
+                     "engine": engine, "wall_s": walls[engine],
+                     "blocks_per_s": n / walls[engine],
+                     "makespan_s": reps[engine].makespan_s,
+                     "energy_j": reps[engine].total_energy_j,
+                     "migrations": reps[engine].n_migrations})
+    assert reps["vector"] == reps["scalar"], \
+        "vectorized engine diverged from the scalar oracle at 100k x 16"
+    speedup = walls["scalar"] / walls["vector"]
+    for engine in ("vector", "scalar"):
+        _row(f"engine_100k_{engine}", walls[engine] * 1e6 / n,
+             f"blocks_per_s={n / walls[engine]:,.0f};"
+             f"speedup={speedup:.1f}x;identical=True")
+
+    if quick:
+        return rows
+
+    # --- 1M x 100: plan + vectorized run end-to-end -------------------------
+    n, k = 1_000_000, 100
+    blocks, nodes, deadline, events, cfg = scenario(n, k, 0.002)
+    t0 = time.perf_counter()
+    plan = plan_cluster_arrays(blocks, nodes, deadline_s=deadline)
+    plan_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rep = run_cluster(plan, blocks, config=cfg, events=events,
+                      engine="vector")
+    run_s = time.perf_counter() - t0
+    total = plan_s + run_s
+    rows.append({"scenario": "fleet1m", "n": n, "nodes": k,
+                 "engine": "vector", "plan_s": plan_s, "run_s": run_s,
+                 "wall_s": total, "blocks_per_s": n / total,
+                 "makespan_s": rep.makespan_s,
+                 "energy_j": rep.total_energy_j,
+                 "migrations": rep.n_migrations,
+                 "peak_power_w": rep.peak_power_w})
+    _row("engine_1m_end_to_end", total * 1e6 / n,
+         f"blocks_per_s={n / total:,.0f};plan_s={plan_s:.1f};"
+         f"run_s={run_s:.1f};moves={rep.n_migrations}")
+    return rows
+
+
 def bench_calibrate(quick: bool = False):
     """Telemetry-driven calibration (repro.calibrate): the
     estimate->plan->measure loop.
@@ -912,6 +1011,7 @@ def main() -> None:
         "pipeline": (lambda: bench_pipeline(quick=args.quick), False),
         "cluster": (bench_cluster, False),
         "runtime": (bench_runtime, False),
+        "engine": (lambda: bench_engine(quick=args.quick), False),
         "calibrate": (lambda: bench_calibrate(quick=args.quick), False),
         "roofline": (bench_roofline, False),
         "train": (bench_train, False),

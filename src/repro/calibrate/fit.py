@@ -110,6 +110,23 @@ class CostFit:
             t_comp=t1 * (1.0 - self.mem_fraction),
             t_mem=t1 if self.mem_fraction > 0 else 0.0))
 
+    def roofline_arrays(self, records) -> "RooflineArrays":
+        """Vectorized ``roofline()`` over per-block record counts.
+
+        Produces the ``RooflineArrays`` the SoA planners consume
+        (``repro.pipeline`` attaches it to streamed estimates) — per-element
+        identical to building ``roofline(r)`` block by block.
+        """
+        from repro.core.soa import RooflineArrays
+        r = np.asarray(records, dtype=np.float64)
+        t1 = r * self.cost_per_record
+        z = np.zeros(len(r))
+        return RooflineArrays(
+            has=np.ones(len(r), dtype=bool),
+            t_comp=t1 * (1.0 - self.mem_fraction),
+            t_mem=t1 if self.mem_fraction > 0 else z,
+            t_coll=z, t_fixed=z.copy())
+
 
 @dataclasses.dataclass(frozen=True)
 class SpeedFit:

@@ -26,19 +26,113 @@ controller closes the loop *between blocks*:
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
-from repro.core.scheduler import BlockInfo, plan_dvfs
+import numpy as np
+
+from repro.core.scheduler import BlockInfo, BlockPlan, plan_dvfs_arrays
+from repro.core.soa import BlockArrays
 from repro.cluster.planner import ClusterPlan
 from repro.train.straggler import StragglerDetector
 
 __all__ = ["OnlineReplanner"]
 
 
+class _LazyBase(dict):
+    """``index -> BlockInfo`` view over a ``BlockArrays`` base store.
+
+    Materializes (and memoizes) one ``BlockInfo`` per *touched* index —
+    the scalar observe/move paths only ever look at the handful of blocks
+    they actually process, so a million-block run never pays the full
+    ``to_blocks()`` conversion up front.  Reconstruction is field-for-field
+    the ``BlockArrays.to_blocks`` idiom, so the floats are the arrays' own.
+    """
+
+    def __init__(self, ba: BlockArrays, sorted_idx, order):
+        super().__init__()
+        self._ba, self._sorted, self._order = ba, sorted_idx, order
+
+    def __missing__(self, index):
+        from repro.core.estimator import RooflineTerms, RooflineTimeModel
+        j = int(np.searchsorted(self._sorted, index))
+        if j >= len(self._sorted) or int(self._sorted[j]) != int(index):
+            raise KeyError(index)
+        ba, i = self._ba, int(self._order[j])
+        roof = None
+        if ba.roofline is not None and bool(ba.roofline.has[i]):
+            roof = RooflineTimeModel(RooflineTerms(
+                t_comp=float(ba.roofline.t_comp[i]),
+                t_mem=float(ba.roofline.t_mem[i]),
+                t_coll=float(ba.roofline.t_coll[i]),
+                t_fixed=float(ba.roofline.t_fixed[i])))
+        b = BlockInfo(index=int(ba.index[i]),
+                      est_time_fmax=float(ba.est_time_fmax[i]),
+                      est_rel_halfwidth=float(ba.est_rel_halfwidth[i]),
+                      util=float(ba.util[i]), roofline=roof,
+                      records=(float(ba.records[i])
+                               if ba.records is not None else 0.0))
+        self[index] = b
+        return b
+
+
+class _SoAQueue:
+    """Array-backed FIFO of planned blocks: the ``BlockPlan`` columns plus a
+    head offset.  A pop advances the offset (O(1), no element shuffle, no
+    object churn); restructures (re-plan, migration) swap whole arrays.
+    ``head()`` materializes a real ``BlockPlan`` on demand, so the object
+    consumers (the engine's launch path, the block-boundary oracle, tests)
+    still see the dataclass — with the arrays' own floats."""
+
+    __slots__ = ("idx", "freq", "pred_t", "pred_e", "slot", "off")
+
+    def __init__(self, idx, freq, pred_t, pred_e, slot, off: int = 0):
+        self.idx, self.freq = idx, freq
+        self.pred_t, self.pred_e, self.slot = pred_t, pred_e, slot
+        self.off = off
+
+    @classmethod
+    def from_plan_arrays(cls, pa) -> "_SoAQueue":
+        return cls(pa.index, pa.rel_freq, pa.pred_time_s, pa.pred_energy_j,
+                   np.full(len(pa.index), pa.slot_s))
+
+    @classmethod
+    def from_blocks(cls, blocks) -> "_SoAQueue":
+        n = len(blocks)
+        return cls(
+            np.fromiter((b.index for b in blocks), np.int64, count=n),
+            np.fromiter((b.rel_freq for b in blocks), np.float64, count=n),
+            np.fromiter((b.pred_time_s for b in blocks), np.float64, count=n),
+            np.fromiter((b.pred_energy_j for b in blocks), np.float64,
+                        count=n),
+            np.fromiter((b.slot_s for b in blocks), np.float64, count=n))
+
+    def __len__(self) -> int:
+        return len(self.idx) - self.off
+
+    def __bool__(self) -> bool:
+        return len(self.idx) > self.off
+
+    def head(self) -> BlockPlan:
+        o = self.off
+        return BlockPlan(index=int(self.idx[o]), slot_s=float(self.slot[o]),
+                         rel_freq=float(self.freq[o]),
+                         pred_time_s=float(self.pred_t[o]),
+                         pred_energy_j=float(self.pred_e[o]))
+
+    def blocks(self) -> tuple:
+        o = self.off
+        return tuple(
+            BlockPlan(index=int(i), slot_s=float(s), rel_freq=float(f),
+                      pred_time_s=float(t), pred_energy_j=float(e))
+            for i, s, f, t, e in zip(
+                self.idx[o:].tolist(), self.slot[o:].tolist(),
+                self.freq[o:].tolist(), self.pred_t[o:].tolist(),
+                self.pred_e[o:].tolist()))
+
+
 @dataclasses.dataclass
 class _NodeState:
     spec: object                 # NodeSpec
-    queue: list                  # remaining BlockPlan, head = next to run
+    queue: _SoAQueue             # remaining planned blocks, head = next to run
     detector: StragglerDetector  # EWMA over observed/predicted ratios
     drift: float = 1.0
     drift_at_replan: float = 1.0
@@ -46,6 +140,7 @@ class _NodeState:
     done: int = 0
     replans: int = 0
     last_feasible: bool = True   # feasibility of the most recent re-plan
+    version: int = 0             # bumped on any non-pop queue restructure
 
 
 class OnlineReplanner:
@@ -57,10 +152,30 @@ class OnlineReplanner:
     slowdown factor instead of chasing its own corrections.
     """
 
-    def __init__(self, plan: ClusterPlan, est_blocks: Sequence[BlockInfo], *,
+    def __init__(self, plan: ClusterPlan, est_blocks=None, *,
+                 base_arrays: BlockArrays | None = None,
                  replan_threshold: float = 0.15, ewma_alpha: float = 0.3,
                  error_margin: float = 0.05, calibrator=None):
-        self._base = {b.index: b for b in est_blocks}
+        if est_blocks is not None:
+            self._ba = BlockArrays.from_blocks(est_blocks)
+        elif base_arrays is not None:
+            self._ba = base_arrays
+        else:
+            raise ValueError("OnlineReplanner needs est_blocks or base_arrays")
+        self._ba_order = np.argsort(self._ba.index, kind="stable")
+        self._ba_sorted = self._ba.index[self._ba_order]
+        # contiguous 0..n-1 indices (the SoA build default) make the
+        # index->position map the identity
+        self._ba_ident = bool(np.array_equal(
+            self._ba_sorted, np.arange(len(self._ba_sorted),
+                                       dtype=np.int64)))
+        # BlockInfo view: eager when the caller already has the objects,
+        # lazily materialized from the arrays otherwise (the million-block
+        # seeding path — the scalar observe/move code touches few blocks)
+        self._base = ({b.index: b for b in est_blocks}
+                      if est_blocks is not None
+                      else _LazyBase(self._ba, self._ba_sorted,
+                                     self._ba_order))
         self.deadline_s = plan.deadline_s
         self.replan_threshold = replan_threshold
         self.error_margin = error_margin
@@ -71,14 +186,29 @@ class OnlineReplanner:
         self._nodes: dict = {}
         for np_ in plan.node_plans:
             det = StragglerDetector(alpha=ewma_alpha, warmup_steps=2)
+            # ClusterPlan carries NodePlan (materialized BlockPlans);
+            # ClusterPlanArrays carries NodePlanArrays (PlanArrays) — both
+            # seed the same SoA queue, the latter without materializing a
+            # single per-block object
+            q = (_SoAQueue.from_blocks(np_.blocks)
+                 if hasattr(np_, "blocks")
+                 else _SoAQueue.from_plan_arrays(np_.plan))
             self._nodes[np_.node.name] = _NodeState(
-                spec=np_.node, queue=list(np_.blocks), detector=det)
+                spec=np_.node, queue=q, detector=det)
 
     # --- execution interface -------------------------------------------------
     def next_block(self, node_name: str):
         """The BlockPlan this node should run next (None when drained)."""
         q = self._nodes[node_name].queue
-        return q[0] if q else None
+        return q.head() if q else None
+
+    def next_block_brief(self, node_name: str):
+        """``(index, rel_freq)`` of the next block — the launch path's view,
+        without materializing a ``BlockPlan``.  None when drained."""
+        q = self._nodes[node_name].queue
+        if not q:
+            return None
+        return int(q.idx[q.off]), float(q.freq[q.off])
 
     def observe(self, node_name: str, observed_s: float) -> bool:
         """Record the head block's wall time; returns True if we re-planned."""
@@ -93,10 +223,12 @@ class OnlineReplanner:
         """Pop the head block, advance elapsed time, update the drift EWMA —
         the observation WITHOUT the replan decision."""
         st = self._nodes[node_name]
-        bp = st.queue.pop(0)
+        q = st.queue
+        b_index, b_freq = int(q.idx[q.off]), float(q.freq[q.off])
+        q.off += 1
         st.elapsed_s += observed_s
         st.done += 1
-        base_pred = st.spec.block_time(self._base[bp.index], bp.rel_freq)
+        base_pred = st.spec.block_time(self._base[b_index], b_freq)
         ratio = observed_s / max(base_pred, 1e-12)
         # ratio stream through the straggler EWMA: mean == drift estimate,
         # planned_slot_s=1.0 makes "late vs budget" mean "ratio >> 1"
@@ -147,6 +279,7 @@ class OnlineReplanner:
                                         warmup_steps=2)
         st.drift = 1.0
         st.drift_at_replan = 1.0
+        st.version += 1   # belief spec changed: queue-derived caches stale
         self.recalibrations.append({
             "node": node_name, "after_block": st.done,
             "speed": st.spec.speed,
@@ -167,6 +300,11 @@ class OnlineReplanner:
         """The planner's base (undrifted) f_max estimate for one block."""
         return self._base[index].est_time_fmax
 
+    def base_records(self, index: int) -> float:
+        """The block's data size (records; 0 when the estimate carries
+        none) — what the migration wire model prices transfers by."""
+        return self._base[index].records
+
     def node_names(self) -> tuple:
         return tuple(self._nodes)
 
@@ -175,11 +313,44 @@ class OnlineReplanner:
 
     def queued(self, node_name: str) -> tuple:
         """The node's remaining BlockPlans (head first), as a copy."""
-        return tuple(self._nodes[node_name].queue)
+        return self._nodes[node_name].queue.blocks()
 
     def node_feasible(self, node_name: str) -> bool:
         """Did the node's most recent re-plan fit its remaining budget?"""
         return self._nodes[node_name].last_feasible
+
+    def _pos_of(self, idx):
+        """Base-array positions for an array of global block indices."""
+        if self._ba_ident:
+            return idx
+        return self._ba_order[np.searchsorted(self._ba_sorted, idx)]
+
+    def _vec_block_time(self, spec, pos, freq):
+        """``NodeSpec.block_time`` over base-array positions, op for op
+        (``freq`` may be a scalar or a per-element array)."""
+        est = self._ba.est_time_fmax[pos]
+        fv = np.maximum(freq, 1e-6)
+        roof = self._ba.roofline
+        if roof is not None:
+            tc, tm = roof.t_comp[pos], roof.t_mem[pos]
+            tl, tf = roof.t_coll[pos], roof.t_fixed[pos]
+            at_f = np.maximum(np.maximum(tc / fv, tm), tl) + tf
+            at_1 = np.maximum(np.maximum(tc / 1.0, tm), tl) + tf
+            base = np.where(roof.has[pos],
+                            at_f * (est / np.maximum(at_1, 1e-12)), est / fv)
+        else:
+            base = est / fv
+        return base / spec.speed
+
+    def base_est_many(self, idx) -> np.ndarray:
+        """``base_est`` over an index array (same floats, no objects)."""
+        return self._ba.est_time_fmax[self._pos_of(idx)]
+
+    def base_records_many(self, idx) -> np.ndarray:
+        """``base_records`` over an index array (zeros when sizes unknown)."""
+        if self._ba.records is None:
+            return np.zeros(len(idx))
+        return self._ba.records[self._pos_of(idx)]
 
     def predicted_finish(self, node_name: str, *, at_fmax: bool = False
                          ) -> float:
@@ -187,14 +358,18 @@ class OnlineReplanner:
 
         ``at_fmax`` prices every queued block at the node's f_max instead of
         its planned frequency — the "is this node recoverable by clocking up
-        alone?" question the migration trigger asks.
+        alone?" question the migration trigger asks.  The sequential
+        ``total += t * drift`` chain is reproduced with ``np.cumsum`` over
+        the queue arrays — bitwise the same sum, one pass instead of a
+        Python loop per block.
         """
         st = self._nodes[node_name]
-        total = st.elapsed_s
-        for bp in st.queue:
-            f = st.spec.ladder.f_max if at_fmax else bp.rel_freq
-            total += st.spec.block_time(self._base[bp.index], f) * st.drift
-        return total
+        if not st.queue:
+            return st.elapsed_s
+        idx, freq = self.queued_arrays(node_name)
+        f = st.spec.ladder.f_max if at_fmax else freq
+        terms = self._vec_block_time(st.spec, self._pos_of(idx), f) * st.drift
+        return float(np.cumsum(np.concatenate(([st.elapsed_s], terms)))[-1])
 
     def predicted_block_time(self, node_name: str, index: int,
                              rel_freq: float | None = None) -> float:
@@ -237,22 +412,41 @@ class OnlineReplanner:
         dst_of = {int(i): d for i, d in moves}
         if len(dst_of) != len(moves):
             raise ValueError("duplicate block index in migration batch")
-        keep = []
-        for bp in s.queue:
-            dst = dst_of.pop(bp.index, None)
-            if dst is None:
-                keep.append(bp)
-                continue
-            d = self._nodes[dst]
-            base = self._base[bp.index]
-            f = d.spec.ladder.f_max
-            t = d.spec.block_time(base, f)
-            d.queue.append(dataclasses.replace(
-                bp, rel_freq=f, pred_time_s=t,
-                pred_energy_j=d.spec.block_energy(base, t, f)))
+        q = s.queue
+        o = q.off
+        idx_l = q.idx[o:]
+        moved = np.isin(idx_l, np.fromiter(dst_of, np.int64,
+                                           count=len(dst_of)))
+        # group moved blocks per destination IN SOURCE-QUEUE ORDER (the
+        # order the per-block loop appended them in)
+        pend: dict = {}
+        for p in np.flatnonzero(moved).tolist():
+            bidx = int(idx_l[p])
+            pend.setdefault(dst_of.pop(bidx), []).append(p)
         if dst_of:
             raise KeyError(f"blocks {sorted(dst_of)} not queued on {src}")
-        s.queue = keep
+        for dst, ps in pend.items():
+            d = self._nodes[dst]
+            f = d.spec.ladder.f_max
+            add_t, add_e = [], []
+            for p in ps:
+                base = self._base[int(idx_l[p])]
+                t = d.spec.block_time(base, f)
+                add_t.append(t)
+                add_e.append(d.spec.block_energy(base, t, f))
+            dq, m = d.queue, len(ps)
+            do = dq.off
+            d.queue = _SoAQueue(
+                np.concatenate((dq.idx[do:], idx_l[ps])),
+                np.concatenate((dq.freq[do:], np.full(m, f))),
+                np.concatenate((dq.pred_t[do:], np.asarray(add_t))),
+                np.concatenate((dq.pred_e[do:], np.asarray(add_e))),
+                np.concatenate((dq.slot[do:], q.slot[o:][ps])))
+            d.version += 1
+        keep = ~moved
+        s.queue = _SoAQueue(idx_l[keep], q.freq[o:][keep], q.pred_t[o:][keep],
+                            q.pred_e[o:][keep], q.slot[o:][keep])
+        s.version += 1
 
     def replan_node(self, node_name: str) -> None:
         """Re-run the tail plan for one node (no-op on a drained queue)."""
@@ -260,24 +454,134 @@ class OnlineReplanner:
         if st.queue:
             self._replan_node(node_name, st)
 
+    # --- batch interface for the vectorized runtime engine -------------------
+    def queue_state(self, node_name: str) -> tuple:
+        """``(version, done)`` — the key that identifies the queue's exact
+        content: ``version`` bumps on any restructure (re-plan, migration,
+        recalibration), ``done`` counts head pops.  Anything derived purely
+        from queue content may be cached against this pair and sliced by
+        the pop delta."""
+        st = self._nodes[node_name]
+        return st.version, st.done
+
+    def queued_arrays(self, node_name: str):
+        """The node's remaining queue as ``(index, rel_freq)`` arrays —
+        the SoA view the vectorized engine prices whole stretches from.
+        The queue IS arrays, so this is a pair of O(1) views."""
+        q = self._nodes[node_name].queue
+        return q.idx[q.off:], q.freq[q.off:]
+
+    def node_spec_of(self, node_name: str):
+        """The node's current BELIEF spec (base predictions price off it)."""
+        return self._nodes[node_name].spec
+
+    def scan_observations(self, node_name: str, observed_s,
+                          base_pred) -> int:
+        """How many leading head-of-queue observations the node absorbs
+        WITHOUT re-planning — a pure, bitwise-faithful simulation of
+        consecutive ``observe`` calls (no state is touched).
+
+        ``observed_s[i]`` / ``base_pred[i]`` describe the node's i-th next
+        finish in queue order.  Returns ``k``: observations ``0..k-1``
+        leave the drift EWMA inside the hysteresis band; observation ``k``
+        (if it exists) would trigger ``_replan_node``.  The vectorized
+        engine fast-forwards exactly ``k`` finishes and lets the next one
+        run through the scalar path, where the re-plan (and anything it
+        cascades into — migration, frequency changes) happens with full
+        fidelity.
+        """
+        st = self._nodes[node_name]
+        det = st.detector
+        qlen = len(st.queue)
+        k = min(len(observed_s), qlen)
+        if k == 0:
+            return 0
+        ratios = np.asarray(observed_s, dtype=np.float64)[:k] \
+            / np.maximum(np.asarray(base_pred, dtype=np.float64)[:k], 1e-12)
+        thr = self.replan_threshold
+        drift_at = st.drift_at_replan
+        # quiescent fast path: every ratio equals the settled EWMA mean at
+        # zero variance, so the update chain is a bitwise no-op — either
+        # the very first observation re-plans or none of them do
+        if det.n > 0 and det.var == 0.0 and bool(np.all(ratios == det.mean)):
+            drift = max(det.mean, 1e-6)
+            if abs(drift / drift_at - 1.0) > thr:
+                return 0 if qlen > 1 else k
+            return k
+        alpha, mean, var, n = det.alpha, det.mean, det.var, det.n
+        for i in range(k):
+            r = float(ratios[i])
+            if n == 0:
+                mean = r
+            else:
+                d = r - mean
+                mean += alpha * d
+                var = (1 - alpha) * (var + alpha * d * d)
+            n += 1
+            drift = max(mean, 1e-6)
+            if qlen - (i + 1) > 0 and abs(drift / drift_at - 1.0) > thr:
+                return i
+        return k
+
+    def commit_observations(self, node_name: str, observed_s,
+                            base_pred) -> None:
+        """Apply a ``scan_observations``-cleared batch of head-of-queue
+        observations: bitwise-identical final state to one ``observe`` per
+        block (drift EWMA, elapsed chain, straggler events), but the queue
+        advances in one slice and the quiescent case never re-walks the
+        EWMA floats.  The caller guarantees no observation in the batch
+        re-plans (that is exactly what ``scan_observations`` bounds)."""
+        st = self._nodes[node_name]
+        c = len(observed_s)
+        if c == 0:
+            return
+        if c > len(st.queue):
+            raise ValueError("batch longer than the node's queue")
+        obs = np.asarray(observed_s, dtype=np.float64)
+        ratios = obs / np.maximum(np.asarray(base_pred, dtype=np.float64),
+                                  1e-12)
+        det = st.detector
+        st.queue.off += c
+        # += per block is a sequential float chain — cumsum reproduces it
+        st.elapsed_s = float(np.cumsum(
+            np.concatenate(([st.elapsed_s], obs)))[-1])
+        if det.n > 0 and det.var == 0.0 \
+                and bool(np.all(ratios == det.mean)) \
+                and not det.mean > det.budget_factor:
+            det.n += c          # the whole update chain is a bitwise no-op
+        else:
+            for i, r in enumerate(ratios.tolist()):
+                det.observe(st.done + 1 + i, r, planned_slot_s=1.0)
+        st.done += c
+        st.drift = max(det.mean, 1e-6)
+
     # --- internal ------------------------------------------------------------
     def _replan_node(self, name: str, st: _NodeState) -> None:
         budget = self.deadline_s - st.elapsed_s
-        # node-local re-estimate: base time, drift-corrected, at node speed
-        local = [dataclasses.replace(
-                    self._base[bp.index],
-                    est_time_fmax=(self._base[bp.index].est_time_fmax
-                                   * st.drift / st.spec.speed))
-                 for bp in st.queue]
-        plan = plan_dvfs(local, max(budget, 1e-9), planner="global",
-                         ladder=st.spec.ladder, power=st.spec.power,
-                         error_margin=self.error_margin)
-        st.queue = list(plan.blocks)
+        # node-local re-estimate: base time, drift-corrected, at node speed —
+        # gathered straight from the base arrays (``est * drift / speed``
+        # elementwise is the same float chain the old per-block
+        # ``dataclasses.replace`` produced) and planned SoA-native;
+        # ``plan_dvfs`` is a thin wrapper over ``plan_dvfs_arrays``, so the
+        # resulting queue is bitwise the object path's
+        idx, _ = self.queued_arrays(name)
+        pos = self._pos_of(idx)
+        ba = self._ba
+        local = BlockArrays(
+            idx, ba.est_time_fmax[pos] * st.drift / st.spec.speed,
+            ba.est_rel_halfwidth[pos], ba.util[pos],
+            ba.roofline.select(pos) if ba.roofline is not None else None,
+            None)
+        pa = plan_dvfs_arrays(local, max(budget, 1e-9), planner="global",
+                              ladder=st.spec.ladder, power=st.spec.power,
+                              error_margin=self.error_margin)
+        st.queue = _SoAQueue.from_plan_arrays(pa)
         st.drift_at_replan = st.drift
-        st.last_feasible = plan.feasible
+        st.last_feasible = pa.feasible
         st.replans += 1
+        st.version += 1
         self.replan_log.append({
             "node": name, "after_block": st.done, "drift": st.drift,
             "budget_s": budget,
-            "freqs": tuple(bp.rel_freq for bp in st.queue),
+            "freqs": tuple(pa.rel_freq.tolist()),
         })

@@ -241,6 +241,84 @@ class ClusterPlanArrays:
                            self.feasible, self.power_cap_ok)
 
 
+def _assign_lpt_grouped(nodes, order, est_list, groups, strategy,
+                        by_speed, deadline_s):
+    """Earliest-finish placement at fleet scale; exact loop equivalent.
+
+    The reference loop takes ``min_j (loads[j] + e / speed_j, j)`` per
+    block — O(nodes) of Python tuple churn per placement.  Within one
+    *speed*, finish is monotone in load, so a lazy min-heap of
+    ``(load, j)`` per distinct speed knows each speed's minimal finish
+    VALUE, and the cross-speed minimum is a vectorized argmin over one
+    ``best_load + e / speed`` array (same divides, same floats).  The
+    winning NODE needs care: two loads can differ yet round to the same
+    finish (``15.9 + 2.3 == 15.899999999999999 + 2.3``), and the tuple
+    compare breaks ties on (finish, j) — so every group at the minimal
+    finish pop-walks its heap over the entries whose finish equals it
+    (a prefix, by monotonicity) and the smallest node id wins.
+    """
+    k_nodes = len(nodes)
+    speeds = np.array([nd.speed for nd in nodes])
+    loads = np.zeros(k_nodes)
+    gid_of = {}
+    g_of = np.empty(k_nodes, dtype=np.int64)
+    for j, nd in enumerate(nodes):
+        g_of[j] = gid_of.setdefault(nd.speed, len(gid_of))
+    n_g = len(gid_of)
+    sp = np.empty(n_g)
+    for s_val, g in gid_of.items():
+        sp[g] = s_val
+    gheaps: list = [[] for _ in range(n_g)]
+    for j in range(k_nodes):
+        gheaps[int(g_of[j])].append((0.0, j))
+    for h in gheaps:
+        heapq.heapify(h)
+    best_load = np.zeros(n_g)
+    pack = strategy == "pack"
+    if pack:
+        bys = np.asarray(by_speed, dtype=np.int64)
+        sp_bys = speeds[bys]
+    for p in order.tolist():
+        e = est_list[p]
+        k = -1
+        if pack:
+            ok = np.nonzero(loads[bys] + e / sp_bys
+                            <= deadline_s + 1e-9)[0]
+            if len(ok):
+                k = int(bys[ok[0]])
+        if k < 0:  # lpt rule (also pack's overloaded fallback)
+            f = best_load + e / sp
+            g = int(f.argmin())
+            m = f[g]
+            for g in np.nonzero(f == m)[0].tolist():
+                h = gheaps[g]
+                eos = float(e / sp[g])
+                stash = []
+                while h:
+                    l0, j0 = h[0]
+                    if l0 != loads[j0]:
+                        heapq.heappop(h)   # stale (load has grown since)
+                        continue
+                    if l0 + eos != m:
+                        break
+                    heapq.heappop(h)
+                    stash.append((l0, j0))
+                    if k < 0 or j0 < k:
+                        k = j0
+                for it in stash:
+                    heapq.heappush(h, it)
+        groups[k].append(p)
+        loads[k] += e / speeds[k]
+        g = int(g_of[k])
+        h = gheaps[g]
+        heapq.heappush(h, (loads[k], k))
+        # discard entries priced at a stale (smaller) load on sight
+        while h[0][0] != loads[h[0][1]]:
+            heapq.heappop(h)
+        best_load[g] = h[0][0]
+    return [np.asarray(gr, dtype=np.int64) for gr in groups]
+
+
 def assign_block_arrays(
     ba: BlockArrays,
     nodes: Sequence[NodeSpec],
@@ -268,10 +346,13 @@ def assign_block_arrays(
                 raise ValueError("pack assignment needs deadline_s")
             order = np.lexsort((ba.index, -est))
             groups = [[] for _ in nodes]
-            loads = [0.0] * len(nodes)
             by_speed = sorted(range(len(nodes)),
                               key=lambda k: (-nodes[k].speed, k))
             est_list = est.tolist()
+            if len(nodes) > 8:
+                return _assign_lpt_grouped(nodes, order, est_list, groups,
+                                           strategy, by_speed, deadline_s)
+            loads = [0.0] * len(nodes)
             for p in order.tolist():
                 e = est_list[p]
                 k = None

@@ -71,6 +71,7 @@ class BlockInfo:
     est_rel_halfwidth: float = 0.0          # estimation uncertainty (CI halfwidth / PT)
     util: float = 1.0                       # busy utilization while processing
     roofline: RooflineTimeModel | None = None  # optional TPU time model
+    records: float = 0.0                    # data size (records); 0 = unknown
 
 
 @dataclasses.dataclass(frozen=True)
@@ -442,8 +443,30 @@ def _run_downclock_tables(times_tab: np.ndarray, energies_tab: np.ndarray,
         if _downclock_sorted_scan(times_tab, energies_tab, pos, times,
                                   energies, stop, group_total, group_budget):
             return
+    else:
+        # per-pool budgets are independent: a step's acceptance reads only
+        # its own pool's total/budget, and steps in different pools commute,
+        # so the global best-ratio greedy restricted to one pool IS that
+        # pool's best-ratio greedy — decompose exactly into single-pool runs
+        # (each of which gets the all-fits / sorted-scan fast paths)
+        for g in range(len(group_total)):
+            sel = np.nonzero(group == g)[0]
+            if len(sel) == 0:
+                continue
+            sub_pos = pos[sel]
+            sub_t = times[sel]
+            sub_e = energies[sel]
+            _run_downclock_tables(times_tab[sel], energies_tab[sel],
+                                  sub_pos, sub_t, sub_e,
+                                  np.zeros(len(sel), dtype=np.int64),
+                                  group_total[g:g + 1],
+                                  group_budget[g:g + 1])
+            pos[sel] = sub_pos
+            times[sel] = sub_t
+            energies[sel] = sub_e
+        return
 
-    # budget-binding pools: lazily validated max-heap over table lookups
+    # budget-binding pool: lazily validated max-heap over table lookups
     cand = np.nonzero(pos > 0)[0]
     p = pos[cand]
     t_lo = times_tab[cand, p - 1]

@@ -55,19 +55,22 @@ class BlockArrays:
     est_rel_halfwidth: np.ndarray  # (n,) float64
     util: np.ndarray             # (n,) float64
     roofline: RooflineArrays | None = None
+    records: np.ndarray | None = None  # (n,) float64 data sizes; None = unknown
 
     def __len__(self) -> int:
         return len(self.index)
 
     @classmethod
     def build(cls, est_time_fmax, *, index=None, est_rel_halfwidth=None,
-              util=None, roofline: RooflineArrays | None = None) -> "BlockArrays":
+              util=None, roofline: RooflineArrays | None = None,
+              records=None) -> "BlockArrays":
         est = np.asarray(est_time_fmax, dtype=np.float64)
         n = len(est)
         idx = (np.arange(n, dtype=np.int64) if index is None
                else np.asarray(index, dtype=np.int64))
+        rec = None if records is None else _as_f64(records, n, 0.0)
         return cls(idx, est, _as_f64(est_rel_halfwidth, n, 0.0),
-                   _as_f64(util, n, 1.0), roofline)
+                   _as_f64(util, n, 1.0), roofline, rec)
 
     @classmethod
     def from_blocks(cls, blocks) -> "BlockArrays":
@@ -89,12 +92,18 @@ class BlockArrays:
                 np.float64, count=n)
             roofline = RooflineArrays(has, pull("t_comp"), pull("t_mem"),
                                       pull("t_coll"), pull("t_fixed"))
-        return cls(index, est, hw, util, roofline)
+        records = None
+        if any(getattr(b, "records", 0.0) for b in blocks):
+            records = np.fromiter((getattr(b, "records", 0.0) for b in blocks),
+                                  np.float64, count=n)
+        return cls(index, est, hw, util, roofline, records)
 
     def select(self, idx) -> "BlockArrays":
         roof = self.roofline.select(idx) if self.roofline is not None else None
+        rec = self.records[idx] if self.records is not None else None
         return BlockArrays(self.index[idx], self.est_time_fmax[idx],
-                           self.est_rel_halfwidth[idx], self.util[idx], roof)
+                           self.est_rel_halfwidth[idx], self.util[idx], roof,
+                           rec)
 
     def to_blocks(self) -> list:
         """Materialize ``BlockInfo`` objects (small-n interop / oracles)."""
@@ -113,7 +122,9 @@ class BlockArrays:
                 index=int(self.index[i]),
                 est_time_fmax=float(self.est_time_fmax[i]),
                 est_rel_halfwidth=float(self.est_rel_halfwidth[i]),
-                util=float(self.util[i]), roofline=roof))
+                util=float(self.util[i]), roofline=roof,
+                records=(float(self.records[i])
+                         if self.records is not None else 0.0)))
         return out
 
 
@@ -150,10 +161,15 @@ class EstimateArrays:
 
     def to_block_arrays(self, *, util=None,
                         roofline: RooflineArrays | None = None) -> BlockArrays:
-        """Planner input: est PT_i at f_max = the estimated total cost."""
+        """Planner input: est PT_i at f_max = the estimated total cost.
+
+        ``n_records`` rides along as the blocks' data sizes — what the
+        migration wire model (``repro.runtime.migrate``) prices transfers
+        by."""
         return BlockArrays.build(self.total, index=self.index,
                                  est_rel_halfwidth=self.rel_halfwidth,
-                                 util=util, roofline=roofline)
+                                 util=util, roofline=roofline,
+                                 records=self.n_records)
 
     def to_block_estimates(self) -> list:
         """Materialize ``BlockEstimate`` objects (oracle / interop path)."""

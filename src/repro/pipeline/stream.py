@@ -50,6 +50,36 @@ class PipelineConfig:
     power: PowerModel = TPU_V5E_POWER
     error_margin: float = 0.05
     adaptive_margin: bool = False
+    # measured calibration (repro.calibrate) — closes the estimate->plan->
+    # measure loop for STREAMED plans:
+    #   * a ``CostFit`` prices token blocks with the fitted per-record cost
+    #     instead of the linear token model, and stamps every planned block
+    #     with the fit's max-form roofline (calibrated memory-bound
+    #     fraction), exactly as ``CostFit.roofline()`` would per block;
+    #   * a ``CounterTrace`` upgrades the node specs at plan time
+    #     (``plan_cluster_arrays(calibration=trace)``);
+    #   * a ``(CostFit, CounterTrace)`` tuple applies both.
+    calibration: object = None
+
+
+def _split_calibration(config: "PipelineConfig"):
+    """-> (CostFit | None, CounterTrace | None) from the config hook."""
+    cal = config.calibration
+    if cal is None:
+        return None, None
+    from repro.calibrate.fit import CostFit
+    from repro.calibrate.trace import CounterTrace
+    if isinstance(cal, CostFit):
+        return cal, None
+    if isinstance(cal, CounterTrace):
+        return None, cal
+    if isinstance(cal, tuple) and len(cal) == 2 \
+            and isinstance(cal[0], CostFit) \
+            and isinstance(cal[1], CounterTrace):
+        return cal[0], cal[1]
+    raise TypeError("PipelineConfig.calibration must be a CostFit, a "
+                    f"CounterTrace, or a (CostFit, CounterTrace) tuple, "
+                    f"got {type(cal).__name__}")
 
 
 def _iter_chunks(source, chunk_size: int) -> Iterator[dict]:
@@ -109,6 +139,17 @@ def token_chunk_estimates(
     tokens = np.asarray(tokens)
     b, r, length = tokens.shape
     index = start_index + np.arange(b, dtype=np.int64)
+    fit, _ = _split_calibration(config)
+    if fit is not None:
+        # calibrated pricing: the fitted per-record cost replaces the
+        # linear token model outright — cost is a pure function of record
+        # count, so no rows are sampled and no kernel dispatch runs; the
+        # CI halfwidth is the fit's own residual scale
+        total = fit.est_time_fmax(np.full(b, float(r)))
+        hw = _z_for_confidence(config.confidence) * fit.rmse_s
+        return EstimateArrays(index, total, total - hw, total + hw,
+                              np.zeros(b, dtype=np.int64),
+                              np.full(b, r, dtype=np.int64))
     k = np.minimum(r, np.maximum(max(int(config.min_samples), 1),
                                  int(np.ceil(config.fraction * r))))
     k = np.full(b, k, dtype=np.int64)
@@ -190,15 +231,21 @@ def plan_estimates(
     Single-node by default (``PlanArrays``); passing ``nodes`` routes the
     same ``BlockArrays`` through ``plan_cluster_arrays``
     (``ClusterPlanArrays``), where ``power_cap_w`` adds the cluster-wide
-    Σ-power screen.
+    Σ-power screen.  ``config.calibration`` applies here: a ``CostFit``
+    stamps every block with the fit's calibrated roofline (identical to
+    ``CostFit.roofline()`` per block), a ``CounterTrace`` calibrates the
+    node specs before the cluster plan.
     """
-    ba = est.to_block_arrays(util=util)
+    fit, trace = _split_calibration(config)
+    roofline = fit.roofline_arrays(est.n_records) if fit is not None else None
+    ba = est.to_block_arrays(util=util, roofline=roofline)
     if nodes is not None:
         from repro.cluster.planner import plan_cluster_arrays
         return plan_cluster_arrays(ba, nodes, deadline_s,
                                    assignment=assignment,
                                    error_margin=config.error_margin,
-                                   power_cap_w=power_cap_w)
+                                   power_cap_w=power_cap_w,
+                                   calibration=trace)
     if power_cap_w is not None:
         raise ValueError("power_cap_w needs a cluster plan (pass nodes)")
     return plan_dvfs_arrays(ba, deadline_s, planner=config.planner,

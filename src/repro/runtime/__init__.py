@@ -35,11 +35,12 @@ from repro.runtime.engine import (ClusterRuntime, NodeRuntimeReport,
                                   RuntimeConfig, RuntimeReport, run_cluster)
 from repro.runtime.events import Event, EventQueue, FaultEvent
 from repro.runtime.migrate import MigrationModel, MigrationRecord, plan_moves
+from repro.runtime.vector import VectorClusterRuntime
 
 __all__ = [
     "ActuationModel", "PowerLedger",
     "ClusterRuntime", "NodeRuntimeReport", "RuntimeConfig", "RuntimeReport",
-    "run_cluster",
+    "run_cluster", "VectorClusterRuntime",
     "Event", "EventQueue", "FaultEvent",
     "MigrationModel", "MigrationRecord", "plan_moves",
 ]

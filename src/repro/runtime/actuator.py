@@ -21,7 +21,11 @@ checks from event timestamps alone).
 
 ``PowerLedger`` tracks every node's instantaneous draw (idle nodes burn
 ``p_idle``; a busy node burns ``P(util, f)``) so the engine can refuse any
-transition that would push the cluster total over ``power_cap_w``.
+transition that would push the cluster total over ``power_cap_w``.  Besides
+the per-node compute draw it carries an additive *auxiliary* channel
+(``add_aux``) for draws that are not the chip itself — today the migration
+wire (``repro.runtime.migrate``); aux watts count against the cap exactly
+like compute watts.
 """
 from __future__ import annotations
 
@@ -109,6 +113,7 @@ class PowerLedger:
                  record: bool = False):
         self._draw = list(idle_draws)   # per-node current watts
         self._idle = list(idle_draws)
+        self._aux = [0.0] * len(self._draw)  # additive non-compute watts
         self.total_w = float(sum(self._draw))
         self.cap_w = cap_w
         self.peak_w = self.total_w
@@ -118,12 +123,35 @@ class PowerLedger:
     def draw_of(self, node: int) -> float:
         return self._draw[node]
 
+    def aux_of(self, node: int) -> float:
+        return self._aux[node]
+
     def fits(self, node: int, new_draw: float) -> bool:
-        """Would moving ``node`` to ``new_draw`` watts respect the cap?"""
+        """Would moving ``node`` to ``new_draw`` watts respect the cap?
+
+        Auxiliary draws are part of ``total_w`` and never replaced by a
+        compute transition, so they tighten this test automatically.
+        """
         if self.cap_w is None:
             return True
         return (self.total_w - self._draw[node] + new_draw
                 <= self.cap_w + 1e-9)
+
+    def headroom_w(self) -> float:
+        """Watts left under the cap right now (inf when uncapped)."""
+        if self.cap_w is None:
+            return float("inf")
+        return self.cap_w - self.total_w
+
+    def add_aux(self, node: int, dwatts: float, now: float) -> None:
+        """Add (or, negative, remove) auxiliary watts on ``node`` — draw
+        that is not the chip's compute state, e.g. a migration transfer's
+        wire power.  Counts toward the total, the peak, and the cap."""
+        self._aux[node] += dwatts
+        self.total_w += dwatts
+        self.peak_w = max(self.peak_w, self.total_w)
+        if self._record:
+            self.samples.append((now, self.total_w))
 
     def set_draw(self, node: int, watts: float, now: float) -> None:
         self.total_w += watts - self._draw[node]

@@ -46,8 +46,8 @@ from repro.cluster.planner import ClusterPlan, ClusterPlanArrays
 from repro.core.soa import BlockArrays
 from repro.runtime.actuator import ActuationModel, InFlight, PowerLedger
 from repro.runtime.events import (BLOCK_FINISH, BLOCK_START, FAULT,
-                                  FREQ_SWITCH, KIND_NAMES, TELEMETRY, Event,
-                                  EventQueue, FaultEvent)
+                                  FREQ_SWITCH, KIND_NAMES, TELEMETRY,
+                                  WIRE_RELEASE, Event, EventQueue, FaultEvent)
 from repro.runtime.migrate import MigrationModel, plan_moves
 
 __all__ = ["RuntimeConfig", "NodeRuntimeReport", "RuntimeReport",
@@ -103,6 +103,7 @@ class NodeRuntimeReport:
     switch_energy_j: float
     migrated_in: int
     migrated_out: int
+    migrate_energy_j: float = 0.0  # transfer joules charged as the SOURCE
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,6 +119,7 @@ class RuntimeReport:
     n_migrations: int = 0
     n_switches: int = 0
     switch_energy_j: float = 0.0
+    migration_energy_j: float = 0.0  # wire transfer joules, summed over moves
     peak_power_w: float = 0.0
     power_cap_w: float | None = None
     migrations: tuple = ()   # of migrate.MigrationRecord
@@ -137,7 +139,8 @@ class _NodeState:
                  "busy_s", "energy_j", "freqs", "inflight", "hw_freq",
                  "fault_factor", "slow_events", "pending_target", "want_up",
                  "waiting", "finish_s", "n_switches", "switch_energy_j",
-                 "migrated_in", "migrated_out", "migrate_stuck")
+                 "migrated_in", "migrated_out", "migrate_stuck",
+                 "migrate_energy_j")
 
     def __init__(self, spec, nid: int, idx: np.ndarray, freq: np.ndarray):
         self.spec = spec
@@ -163,6 +166,7 @@ class _NodeState:
         self.migrated_in = 0
         self.migrated_out = 0
         self.migrate_stuck = False  # last migration attempt left a miss
+        self.migrate_energy_j = 0.0  # transfer joules charged as the source
 
 
 class ClusterRuntime:
@@ -235,11 +239,14 @@ class ClusterRuntime:
 
         self.controller = None
         if config.online:
-            if plan_obj is None:
-                plan_obj = cpa.to_cluster_plan()
-            est = est_blocks if est_blocks is not None else truth.to_blocks()
+            # seed SoA-native: the controller consumes ClusterPlanArrays
+            # directly, and with no explicit est_blocks the truth arrays ARE
+            # the base estimates (same floats, zero conversion) — a
+            # million-block run no longer materializes BlockInfo objects
             self.controller = OnlineReplanner(
-                plan_obj, est, replan_threshold=config.replan_threshold,
+                plan_obj if plan_obj is not None else cpa, est_blocks,
+                base_arrays=truth if est_blocks is None else None,
+                replan_threshold=config.replan_threshold,
                 ewma_alpha=config.ewma_alpha,
                 error_margin=config.error_margin,
                 calibrator=config.calibrator)
@@ -255,6 +262,9 @@ class ClusterRuntime:
         self.queue = EventQueue()
         self.log: list = []
         self.migrations: list = []
+        self._pending_tel = 0    # TELEMETRY events pushed but not handled
+        self._pending_wire = 0   # WIRE_RELEASE events pushed but not handled
+        self._off_plan = 0       # cap-clamped launches (off-plan durations)
         self._ran = False
 
     # --- truth costs (bitwise-identical to the scalar block_time path) ------
@@ -293,8 +303,7 @@ class ClusterRuntime:
     def _next_planned(self, st: _NodeState):
         """(global index, planned freq) of the node's next block, or None."""
         if self.controller is not None:
-            bp = self.controller.next_block(st.spec.name)
-            return None if bp is None else (bp.index, bp.rel_freq)
+            return self.controller.next_block_brief(st.spec.name)
         if st.ptr >= len(st.idx):
             return None
         return int(st.idx[st.ptr]), float(st.freq[st.ptr])
@@ -332,9 +341,14 @@ class ClusterRuntime:
             # transfer completes (duplicate wakeups are harmless — the
             # first launch wins, later ones see the node busy)
             ready = self._mig_ready.get(index)
-            if ready is not None and ready > now + 1e-12:
-                self.queue.push(Event(ready, BLOCK_START, st.nid))
-                return
+            if ready is not None:
+                if ready > now + 1e-12:
+                    self.queue.push(Event(ready, BLOCK_START, st.nid))
+                    return
+                # the transfer completed and the block is launching: its
+                # wire entry can never gate anything again (only the queue
+                # head launches, and it leaves the queue right here)
+                del self._mig_ready[index]
         pos = self._truth_pos(index)
         util = float(self._t_util[pos])
         latency = self.config.actuation.latency_s
@@ -355,6 +369,10 @@ class ClusterRuntime:
                 st.waiting = True
                 self._log(now, BLOCK_START, st, "deferred", index)
                 return
+            if f_run != f_launch:
+                # cap clamp: the block runs off its planned duration, so any
+                # drift-scan continuation derived before this launch is void
+                self._off_plan += 1
         st.waiting = False
 
         if st.hw_freq is not None and f_run != st.hw_freq:
@@ -416,6 +434,7 @@ class ClusterRuntime:
         if self.controller is not None:
             self.queue.push(Event(now, TELEMETRY, st.nid,
                                   (index, block_busy, samples)))
+            self._pending_tel += 1
         self.queue.push(Event(now, BLOCK_START, st.nid))
 
     def _emit_samples(self, st: _NodeState, fl: InFlight, index: int,
@@ -440,6 +459,7 @@ class ClusterRuntime:
 
     def _telemetry(self, now: float, st: _NodeState, data: tuple) -> None:
         index, observed_s, samples = data
+        self._pending_tel -= 1
         replanned = self.controller.on_telemetry(st.spec.name, observed_s,
                                                  samples=samples)
         self._log(now, TELEMETRY, st, index, observed_s, replanned)
@@ -461,12 +481,18 @@ class ClusterRuntime:
             return
         moves = plan_moves(self.controller, st.spec.name, now, margin=margin,
                            max_moves=self.config.max_moves,
-                           migration=self.config.migration)
+                           migration=self.config.migration,
+                           wire_budget_w=self.ledger.headroom_w())
         st.migrate_stuck = self.controller.predicted_miss(st.spec.name,
                                                           margin=margin)
+        wire_w = 0.0
+        latency = self.config.migration.latency_s_per_block
         for mv in moves:
             self.migrations.append(mv)
             st.migrated_out += 1
+            st.migrate_energy_j += mv.energy_j
+            if mv.energy_j > 0 and latency > 0:
+                wire_w += mv.energy_j / latency
             dst = self.nodes[self._id_of[mv.dst]]
             dst.migrated_in += 1
             if mv.ready_s > now + 1e-12:
@@ -476,6 +502,14 @@ class ClusterRuntime:
             if dst.inflight is None:
                 # a drained (or deferred) target got work: wake it
                 self.queue.push(Event(now, BLOCK_START, dst.nid))
+        if wire_w > 0:
+            # the transfers draw wire power on the SOURCE for the transfer
+            # window — the cap (and the peak) see the wire, not just chips.
+            # plan_moves already budgeted the watts against headroom_w().
+            self.ledger.add_aux(st.nid, wire_w, now)
+            self.queue.push(Event(now + latency, WIRE_RELEASE, st.nid,
+                                  (wire_w,)))
+            self._pending_wire += 1
 
     def _freq_switch(self, now: float, st: _NodeState, data: tuple) -> None:
         target = data[0]
@@ -504,6 +538,9 @@ class ClusterRuntime:
         old_f = fl.rel_freq
         if new_f < target - 1e-12:
             st.want_up = target   # partial climb: resume on power release
+        # a mid-block split re-prices the in-flight remainder: any cached
+        # drift-scan continuation is void (same flag as the cap clamp)
+        self._off_plan += 1
         fl.split_at(now, st.true_spec.power, util)
         fl.rel_freq = new_f
         fl.freqs = fl.freqs + (new_f,)
@@ -536,6 +573,14 @@ class ClusterRuntime:
         fl.generation += 1
         self.queue.push(Event(now + fl.seg_time, BLOCK_FINISH, st.nid,
                               (fl.block_index, fl.generation)))
+
+    def _wire_release(self, now: float, st: _NodeState, data: tuple) -> None:
+        """A migration transfer window closed: drop its wire watts."""
+        wire_w = data[0]
+        self._pending_wire -= 1
+        self.ledger.add_aux(st.nid, -wire_w, now)
+        self._log(now, WIRE_RELEASE, st, wire_w)
+        self._power_released(now)
 
     def _power_released(self, now: float) -> None:
         """Cap headroom appeared: wake deferred launches, stagger clock-ups.
@@ -578,6 +623,7 @@ class ClusterRuntime:
             TELEMETRY: self._telemetry,
             FREQ_SWITCH: self._freq_switch,
             FAULT: self._fault,
+            WIRE_RELEASE: self._wire_release,
         }
         while self.queue:
             ev = self.queue.pop()
@@ -593,7 +639,7 @@ class ClusterRuntime:
             NodeRuntimeReport(st.spec.name, st.busy_s, st.energy_j, st.done,
                               tuple(st.freqs), st.finish_s, st.n_switches,
                               st.switch_energy_j, st.migrated_in,
-                              st.migrated_out)
+                              st.migrated_out, st.migrate_energy_j)
             for st in self.nodes)
         makespan = max((nr.finish_s for nr in node_reports), default=0.0)
         idle = sum(max(self.deadline_s - nr.busy_s, 0.0)
@@ -618,6 +664,8 @@ class ClusterRuntime:
             n_switches=sum(nr.n_switches for nr in node_reports),
             switch_energy_j=float(sum(nr.switch_energy_j
                                       for nr in node_reports)),
+            migration_energy_j=float(sum(nr.migrate_energy_j
+                                         for nr in node_reports)),
             peak_power_w=self.ledger.peak_w,
             power_cap_w=self.ledger.cap_w,
             migrations=tuple(self.migrations),
@@ -633,6 +681,7 @@ def run_cluster(
     events=(),
     est_blocks=None,
     true_nodes=None,
+    engine: str = "auto",
 ) -> RuntimeReport:
     """Execute ``plan`` against true block costs on the event-driven runtime.
 
@@ -648,6 +697,20 @@ def run_cluster(
     keep the planner's specs.  With ``config.trace`` /
     ``config.calibrator`` set, the actuator path emits one counter sample
     per executed block segment into the recorder / the windowed refit.
+
+    ``engine`` selects the stepper: ``"scalar"`` is the frozen
+    one-event-at-a-time oracle (this module), ``"vector"`` the batched
+    fast-forward engine (``repro.runtime.vector``) that commits whole
+    fault-free stretches with array arithmetic, and ``"auto"`` (default)
+    uses the vectorized engine — safe because it is bit-identical to the
+    oracle by contract (``tests/test_runtime_vector.py``).
     """
-    return ClusterRuntime(plan, truth, config=config, events=events,
-                          est_blocks=est_blocks, true_nodes=true_nodes).run()
+    if engine not in ("auto", "vector", "scalar"):
+        raise ValueError(f"unknown engine {engine!r} "
+                         "(pick 'auto', 'vector', or 'scalar')")
+    cls = ClusterRuntime
+    if engine != "scalar":
+        from repro.runtime.vector import VectorClusterRuntime
+        cls = VectorClusterRuntime
+    return cls(plan, truth, config=config, events=events,
+               est_blocks=est_blocks, true_nodes=true_nodes).run()

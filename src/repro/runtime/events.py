@@ -20,6 +20,8 @@ timestamp:
     FAULT          slowdown factors change before new work is priced;
     TELEMETRY      the controller observes a fully settled node, so its
                    re-plan (and any migration) sees post-fault truth;
+    WIRE_RELEASE   a completed migration transfer returns its wire draw to
+                   the power ledger before new work is admitted;
     BLOCK_START    new work starts last, seeing every decision above.
 """
 from __future__ import annotations
@@ -28,8 +30,8 @@ import dataclasses
 import heapq
 
 __all__ = [
-    "BLOCK_FINISH", "FREQ_SWITCH", "FAULT", "TELEMETRY", "BLOCK_START",
-    "KIND_NAMES", "Event", "FaultEvent", "EventQueue",
+    "BLOCK_FINISH", "FREQ_SWITCH", "FAULT", "TELEMETRY", "WIRE_RELEASE",
+    "BLOCK_START", "KIND_NAMES", "Event", "FaultEvent", "EventQueue",
 ]
 
 # kind priorities — the tie-break order at one timestamp (see module doc)
@@ -37,13 +39,15 @@ BLOCK_FINISH = 0
 FREQ_SWITCH = 1
 FAULT = 2
 TELEMETRY = 3
-BLOCK_START = 4
+WIRE_RELEASE = 4
+BLOCK_START = 5
 
 KIND_NAMES = {
     BLOCK_FINISH: "block_finish",
     FREQ_SWITCH: "freq_switch",
     FAULT: "fault",
     TELEMETRY: "telemetry",
+    WIRE_RELEASE: "wire_release",
     BLOCK_START: "block_start",
 }
 
@@ -60,6 +64,8 @@ class Event:
     TELEMETRY     (block_index, observed_s, samples) — a finished block's
                   wall time plus its counter-trace segments (empty tuple
                   unless trace emission is on);
+    WIRE_RELEASE  (watts,) — a migration transfer on this (source) node
+                  completed; drop its wire draw from the power ledger;
     BLOCK_START   () — the node should (try to) start its next queued block.
     """
 

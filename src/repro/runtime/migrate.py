@@ -47,17 +47,40 @@ class MigrationModel:
     START on its destination until ``move time + latency`` (the engine
     defers its launch), and ``plan_moves`` weighs the same latency in its
     gain test — a destination only accepts a block if it stays inside the
-    deadline with the block arriving late.  The default (0) keeps moves
-    free, bit-compatible with the pre-model behaviour.  ROADMAP's full
-    "data size aware transfer energy" model remains open; this is the
-    down payment that makes migration stop looking free.
+    deadline with the block arriving late.
+
+    ``energy_j_per_record`` is the data-size-aware transfer energy: moving
+    a block of ``r`` records costs ``r * energy_j_per_record`` joules,
+    charged to the SOURCE node's migration ledger at move time.  With
+    ``latency_s_per_block > 0`` the same energy is drawn as wire power
+    (``energy / latency`` watts) on the source for the transfer window, so
+    the cluster power cap sees the transfer; with zero latency the energy
+    is charged instantaneously (no draw to meter).  Block sizes come from
+    ``BlockInfo.records`` / ``BlockArrays.records`` — blocks without a
+    recorded size transfer for free (size unknown, nothing to price).
+
+    The all-zero default keeps moves free, bit-compatible with the
+    pre-model behaviour.
     """
 
     latency_s_per_block: float = 0.0
+    energy_j_per_record: float = 0.0
 
     def __post_init__(self):
         if self.latency_s_per_block < 0:
             raise ValueError("migration latency must be >= 0")
+        if self.energy_j_per_record < 0:
+            raise ValueError("migration transfer energy must be >= 0")
+
+    def transfer_energy(self, records: float) -> float:
+        """Joules to move one block of ``records`` records."""
+        return float(records) * self.energy_j_per_record
+
+    def wire_power(self, records: float) -> float:
+        """Watts the transfer draws on the wire (0 when instantaneous)."""
+        if self.latency_s_per_block <= 0:
+            return 0.0
+        return self.transfer_energy(records) / self.latency_s_per_block
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,11 +94,13 @@ class MigrationRecord:
     src_pred_fmax_s: float   # straggler's f_max prediction BEFORE the move
     dst_pred_s: float        # target's predicted finish AFTER the move
     ready_s: float = 0.0     # earliest start on dst (time + transfer latency)
+    energy_j: float = 0.0    # transfer energy charged to the source's wire
 
 
 def plan_moves(controller, straggler: str, now: float,
                *, margin: float = 0.0, max_moves: int | None = None,
-               migration: "MigrationModel | None" = None) -> list:
+               migration: "MigrationModel | None" = None,
+               wire_budget_w: float | None = None) -> list:
     """Apply migration moves on ``controller`` state; returns the records.
 
     Mutates the controller's queues via ``move_blocks`` and finishes with
@@ -89,7 +114,11 @@ def plan_moves(controller, straggler: str, now: float,
     in the gain test: a moved block cannot start on its target before
     ``now + latency``, so a target whose queue would drain before the
     block arrives pays the gap — moves that only fit when free are
-    refused.  Deterministic: block order is the LPT key sort, target order
+    refused.  ``wire_budget_w`` is the cap headroom available for transfer
+    draw (the engine passes ``PowerLedger.headroom_w()``): every accepted
+    move's wire watts accumulate against it, and a move whose transfer the
+    cap cannot power is refused — the target guard sees the wire, not just
+    the destination's deadline.  Deterministic: block order is the LPT key sort, target order
     is (slack desc, node id asc), and every quantity read is controller
     state — no clocks, no RNG.
     """
@@ -99,11 +128,10 @@ def plan_moves(controller, straggler: str, now: float,
     dst_budget = controller.deadline_s
     if not controller.predicted_miss(straggler, margin=margin):
         return []
-    queue = controller.queued(straggler)
-    if not queue:
+    idx, _ = controller.queued_arrays(straggler)
+    if len(idx) == 0:
         return []
-    est = np.array([controller.base_est(bp.index) for bp in queue])
-    idx = np.array([bp.index for bp in queue], dtype=np.int64)
+    est = controller.base_est_many(idx)
     order = np.lexsort((idx, -est))  # assign_block_arrays' LPT keys
 
     # one O(queue) pass with incrementally maintained predictions: targets'
@@ -121,27 +149,41 @@ def plan_moves(controller, straggler: str, now: float,
             for nm in names if nm != straggler}
     node_id = {nm: k for k, nm in enumerate(names)}
     moves: list = []
+    wire_w = 0.0   # accepted moves' cumulative transfer draw this trigger
     for p in order.tolist():
         if src_pred <= budget + 1e-9:
             break
         if max_moves is not None and len(moves) >= max_moves:
             break
-        bp = queue[p]
+        bidx = int(idx[p])
+        energy = w = 0.0
+        if migration is not None and migration.energy_j_per_record > 0:
+            rec = controller.base_records(bidx)
+            energy = migration.transfer_energy(rec)
+            w = migration.wire_power(rec)
+        # cap guard: the transfer itself draws energy/latency watts on the
+        # wire for the whole transfer window; a move the cap cannot power
+        # is refused outright (no target can make its wire cheaper)
+        if wire_budget_w is not None and w > 0 \
+                and wire_w + w > wire_budget_w + 1e-9:
+            continue
         # targets: most predicted slack first, ties to the lower node id
         for nm in sorted(pred, key=lambda nm: (pred[nm], node_id[nm])):
             # invariant guard: the target must stay inside the deadline
             # with the block priced at ITS f_max under ITS drift, AND the
             # block arriving no earlier than now + transfer latency (a
             # drained target waits for the wire, it cannot time-travel)
-            t_add = controller.predicted_block_time(nm, bp.index)
+            t_add = controller.predicted_block_time(nm, bidx)
             arrival = max(pred[nm], now + latency)
             if arrival + t_add <= dst_budget + 1e-9:
                 pred[nm] = arrival + t_add
-                moves.append(MigrationRecord(now, int(bp.index), straggler,
+                wire_w += w
+                moves.append(MigrationRecord(now, bidx, straggler,
                                              nm, src_pred, pred[nm],
-                                             ready_s=now + latency))
+                                             ready_s=now + latency,
+                                             energy_j=energy))
                 src_pred -= controller.predicted_block_time(straggler,
-                                                            bp.index)
+                                                            bidx)
                 break
     if moves:
         controller.move_blocks(straggler,

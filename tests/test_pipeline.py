@@ -253,3 +253,109 @@ def test_plan_arrays_is_soa_not_objects():
     blocks = pa.to_blocks()
     assert len(blocks) == 128
     assert blocks[0].rel_freq == pa.rel_freq[0]
+
+
+# --- calibrated rooflines in the stream path ---------------------------------
+
+def _cluster_plans_equal(cpa, obj):
+    got = cpa.to_cluster_plan()
+    assert got.feasible == obj.feasible
+    for a_np, b_np in zip(got.node_plans, obj.node_plans):
+        assert a_np.node.name == b_np.node.name
+        assert len(a_np.blocks) == len(b_np.blocks)
+        for a, b in zip(a_np.blocks, b_np.blocks):
+            assert a.index == b.index
+            assert a.rel_freq == b.rel_freq
+            assert a.pred_time_s == b.pred_time_s
+            assert a.pred_energy_j == b.pred_energy_j
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(2, 80),
+    chunk=st.integers(1, 40),
+    beta=st.floats(0.0, 0.6),
+    slack=st.floats(0.1, 1.0),
+    seed=st.integers(0, 30),
+)
+def test_stream_calibrated_rooflines_match_object_path(n, chunk, beta,
+                                                       slack, seed):
+    """``PipelineConfig(calibration=CostFit)`` == object path with
+    ``CostFit.roofline()`` stamped block by block — the fitted memory-bound
+    fraction reaches streamed plans exactly as it reaches object plans."""
+    import dataclasses as dc
+    from repro.calibrate import fit_cost_model
+
+    rng = np.random.default_rng(seed)
+    # observations exercising the max-form kink at two frequencies, so the
+    # fit recovers a nonzero memory-bound fraction when beta > 0
+    rec = rng.uniform(100, 2000, 24)
+    f = np.where(np.arange(24) % 2 == 0, 1.0, 0.6)
+    wall = rec * 3e-4 * np.maximum((1.0 - beta) / f, 1.0)
+    cf = fit_cost_model(rec, f, wall)
+
+    nodes = [NodeSpec("a", speed=1.0), NodeSpec("b", speed=0.8)]
+    cfg = PipelineConfig(chunk_size=chunk, calibration=cf)
+    est = stream_estimates(
+        synthetic_cost_chunks(n, 16, seed=seed, chunk_size=chunk), cfg)
+    deadline = float(est.total.sum()) / 0.8 * (1.0 + slack) + 1e-6
+    cpa = plan_estimates(est, deadline, cfg, nodes=nodes)
+
+    # independent object path: scalar CostFit.roofline() per block
+    blocks = [dc.replace(b, roofline=cf.roofline(b.records))
+              for b in est.to_block_arrays().to_blocks()]
+    obj = plan_cluster(blocks, nodes, deadline)
+    _cluster_plans_equal(cpa, obj)
+
+
+def test_stream_calibration_trace_calibrates_nodes():
+    """``PipelineConfig(calibration=CounterTrace)`` == planning against
+    ``calibrate_nodes(nodes, trace)`` — the streamed entry to the
+    estimate->plan->measure loop."""
+    from repro.calibrate import calibrate_nodes, synthetic_trace
+
+    tr_parts = [synthetic_trace(nm, PowerModel(), speed=s, n_samples=60,
+                                seed=i)
+                for i, (nm, s) in enumerate([("a", 1.2), ("b", 0.9)])]
+    from repro.calibrate import CounterTrace
+    tr = CounterTrace.concat(tr_parts)
+    nodes = [NodeSpec("a", speed=1.0), NodeSpec("b", speed=1.0)]
+
+    est = stream_estimates(synthetic_cost_chunks(40, 16, seed=3),
+                           PipelineConfig())
+    deadline = float(est.total.sum()) * 1.2
+    cfg = PipelineConfig(calibration=tr)
+    cpa = plan_estimates(est, deadline, cfg, nodes=nodes)
+    obj = plan_cluster(est.to_block_arrays().to_blocks(),
+                       calibrate_nodes(nodes, tr), deadline)
+    _cluster_plans_equal(cpa, obj)
+
+
+def test_token_estimates_calibrated_pricing():
+    """A CostFit replaces the linear token model: totals are
+    records * cost_per_record, nothing is sampled, and the chunked plan
+    carries the fit's roofline shape."""
+    from repro.calibrate.fit import CostFit
+
+    cf = CostFit(cost_per_record=2e-4, mem_fraction=0.4, rmse_s=1e-3,
+                 n_samples=24)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, 50, (6, 32, 8)).astype(np.int32)
+    cfg = PipelineConfig(calibration=cf)
+    est = stream_estimates_tokens([(0, toks)], cfg)
+    assert np.array_equal(est.total, np.full(6, 32 * 2e-4))
+    assert int(est.n_sampled.sum()) == 0
+    # and the planner sees the calibrated zero-cost down-clock floor
+    pa = plan_estimates(est, float(est.total.sum()) * 1.1, cfg)
+    ba = est.to_block_arrays(roofline=cf.roofline_arrays(est.n_records))
+    assert ba.roofline is not None and bool(ba.roofline.has.all())
+    zero_cost = ba.roofline.t_comp / ba.roofline.t_mem
+    assert np.allclose(zero_cost, 1.0 - cf.mem_fraction)
+    assert pa.feasible
+
+
+def test_pipeline_config_rejects_unknown_calibration():
+    with pytest.raises(TypeError, match="calibration"):
+        plan_estimates(stream_estimates(synthetic_cost_chunks(4, 8, seed=0),
+                                        PipelineConfig()),
+                       100.0, PipelineConfig(calibration=object()))

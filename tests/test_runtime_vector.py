@@ -1,0 +1,194 @@
+"""Vectorized event engine == frozen scalar oracle, property-based.
+
+``repro.runtime.vector.VectorClusterRuntime`` batches same-timestamp
+events and fast-forwards fault-free stretches with whole-array segment
+arithmetic; ``repro.runtime.engine.ClusterRuntime`` stays the frozen
+scalar oracle.  This suite is the contract that lets the oracle stay
+frozen: across randomized fault / slowdown / actuation-latency /
+power-cap / migration (with wire energy) / online-recalibration
+scenarios the two engines must produce IDENTICAL reports and IDENTICAL
+event logs — bitwise, not approximately.  Also pins two-run determinism
+of the vectorized path and the zero-cost migration-energy regression.
+
+Runs under the hypothesis compat shim, so the sweep executes
+(fixed-seed) even where hypothesis is not installed.
+"""
+import dataclasses
+
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.cluster.node import NodeSpec
+from repro.cluster.planner import plan_cluster
+from repro.cluster.sim import SlowdownEvent
+from repro.core.energy import FrequencyLadder, PowerModel
+from repro.core.estimator import RooflineTerms, RooflineTimeModel
+from repro.core.scheduler import BlockInfo
+from repro.runtime import (ActuationModel, FaultEvent, MigrationModel,
+                           RuntimeConfig, run_cluster)
+
+
+def _scenario(seed):
+    """Random plan + ground truth + runtime config, seeded.
+
+    Covers the full feature matrix: rooflines on a subset of blocks,
+    heterogeneous node speeds/power curves, tight and loose deadlines,
+    faults, permanent slowdowns, actuation latency, switch energy,
+    migration latency + wire energy, a cluster power cap, and online
+    recalibration — each drawn independently so combinations land.
+    """
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(40, 250))
+    blocks = []
+    for i in range(n):
+        est = float(rng.uniform(0.2, 3.0))
+        roof = None
+        if rng.random() < 0.4:
+            roof = RooflineTimeModel(RooflineTerms(
+                t_comp=est * float(rng.uniform(0.3, 0.8)),
+                t_mem=est * float(rng.uniform(0.1, 0.5)),
+                t_coll=est * float(rng.uniform(0, 0.2)),
+                t_fixed=est * float(rng.uniform(0, 0.2))))
+        blocks.append(BlockInfo(index=i, est_time_fmax=est,
+                                est_rel_halfwidth=float(rng.uniform(0, 0.25)),
+                                util=float(rng.uniform(0.4, 1.0)),
+                                roofline=roof,
+                                records=float(rng.integers(50, 4000))))
+    k = int(rng.integers(2, 6))
+    lows = sorted(rng.choice([0.4, 0.5, 0.6, 0.7, 0.8, 0.9], size=2,
+                             replace=False))
+    ladder = FrequencyLadder(tuple(float(v) for v in lows) + (1.0,))
+    nodes = [NodeSpec(f"n{j}", ladder=ladder,
+                      power=PowerModel(p_idle=30 + 3 * j, p_full=120 + 10 * j,
+                                       alpha=float(rng.uniform(1.5, 3.0))),
+                      speed=float(rng.uniform(0.7, 1.4)))
+             for j in range(k)]
+    tight = float(rng.uniform(0.6, 1.4))
+    deadline = max(sum(b.est_time_fmax for b in blocks) / k * tight, 5.0)
+    plan = plan_cluster(blocks, nodes, deadline_s=deadline)
+    truth = [dataclasses.replace(b, est_time_fmax=b.est_time_fmax *
+                                 float(rng.uniform(0.6, 2.0))) for b in blocks]
+    events = []
+    for _ in range(int(rng.integers(0, 5))):
+        events.append(FaultEvent(time=float(rng.uniform(1, deadline)),
+                                 node=f"n{int(rng.integers(0, k))}",
+                                 factor=float(rng.uniform(1.05, 2.0))))
+    for _ in range(int(rng.integers(0, 3))):
+        events.append(SlowdownEvent(node=f"n{int(rng.integers(0, k))}",
+                                    after_block=int(rng.integers(1, 30)),
+                                    factor=float(rng.uniform(1.1, 1.8))))
+    latency = float(rng.choice([0.0, 0.0, 0.3, 1.0]))
+    idle_floor = sum(nd.power.p_idle for nd in nodes)
+    cap = None
+    if rng.random() < 0.6:
+        cap = idle_floor + float(rng.uniform(0.3, 1.5)) * \
+            sum(nd.power.p_full - nd.power.p_idle for nd in nodes) / k
+    online = bool(rng.random() < 0.8)
+    migrate = online and bool(rng.random() < 0.6)
+    cfg = RuntimeConfig(
+        online=online, migrate=migrate,
+        actuation=ActuationModel(latency_s=latency,
+                                 switch_energy_j=float(rng.choice([0.0, 0.25]))),
+        migration=MigrationModel(
+            latency_s_per_block=float(rng.choice([0.0, 1.0, 3.0])),
+            energy_j_per_record=float(rng.choice([0.0, 0.005, 0.02]))),
+        power_cap_w=cap, log_events=True)
+    return plan, truth, cfg, events, blocks
+
+
+def _run(engine, seed=None, parts=None):
+    plan, truth, cfg, events, blocks = parts if parts else _scenario(seed)
+    return run_cluster(plan, truth, config=cfg, events=events,
+                       est_blocks=blocks, engine=engine)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6))
+def test_vector_engine_matches_scalar_oracle(seed):
+    parts = _scenario(seed)
+    a = _run("scalar", parts=parts)
+    b = _run("vector", parts=parts)
+    assert a == b
+    assert a.event_log == b.event_log
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6))
+def test_vector_engine_two_run_determinism(seed):
+    parts = _scenario(seed)
+    a = _run("vector", parts=parts)
+    b = _run("vector", parts=parts)
+    assert a == b
+    assert a.event_log == b.event_log
+
+
+def _everything_on_parts(seed=7):
+    """A scenario with every subsystem forced on (not left to chance)."""
+    plan, truth, cfg, events, blocks = _scenario(seed)
+    if not events:
+        events = [FaultEvent(time=2.0, node="n0", factor=1.5)]
+    cap = cfg.power_cap_w
+    if cap is None:
+        cap = 1e9  # generous cap: exercises the cap machinery, binds never
+    cfg = dataclasses.replace(
+        cfg, online=True, migrate=True, power_cap_w=cap,
+        actuation=ActuationModel(latency_s=0.3, switch_energy_j=0.25),
+        migration=MigrationModel(latency_s_per_block=1.0,
+                                 energy_j_per_record=0.005),
+        log_events=True)
+    return plan, truth, cfg, events, blocks
+
+
+def test_everything_on_scalar_vector_identical():
+    parts = _everything_on_parts()
+    a = _run("scalar", parts=parts)
+    b = _run("vector", parts=parts)
+    assert a == b
+    assert a.event_log == b.event_log
+
+
+def test_auto_engine_selects_vector_result():
+    parts = _scenario(3)
+    assert _run("auto", parts=parts) == _run("vector", parts=parts)
+
+
+def test_zero_cost_migration_model_is_bit_identical():
+    """energy_j_per_record=0 must not perturb the simulation at all.
+
+    Regression for the wire-energy accounting: a zero-cost migration
+    model has to reproduce the pre-wire-energy trajectory bitwise (no
+    spurious wire-release events, no energy drift), on both engines.
+    """
+    plan, truth, cfg, events, blocks = _everything_on_parts(seed=11)
+    base = dataclasses.replace(
+        cfg, migration=dataclasses.replace(cfg.migration,
+                                           energy_j_per_record=0.0))
+    legacy = dataclasses.replace(
+        base, migration=MigrationModel(
+            latency_s_per_block=base.migration.latency_s_per_block))
+    for engine in ("scalar", "vector"):
+        a = run_cluster(plan, truth, config=base, events=events,
+                        est_blocks=blocks, engine=engine)
+        b = run_cluster(plan, truth, config=legacy, events=events,
+                        est_blocks=blocks, engine=engine)
+        assert a == b
+        assert a.event_log == b.event_log
+
+
+def test_wire_energy_charged_per_record():
+    """Wire joules = sum over moves of records * rate, kept out of busy energy."""
+    plan, truth, cfg, events, blocks = _everything_on_parts(seed=11)
+    rate = 0.05
+    hot = dataclasses.replace(
+        cfg, migration=dataclasses.replace(cfg.migration,
+                                           energy_j_per_record=rate))
+    cold = dataclasses.replace(
+        cfg, migration=dataclasses.replace(cfg.migration,
+                                           energy_j_per_record=0.0))
+    a = _run("vector", parts=(plan, truth, hot, events, blocks))
+    b = _run("vector", parts=(plan, truth, cold, events, blocks))
+    assert b.migration_energy_j == 0.0
+    expect = sum(mv.energy_j for mv in a.migrations)
+    assert a.migration_energy_j == expect
+    if a.migrations:
+        assert a.migration_energy_j > 0.0
