@@ -33,7 +33,7 @@ METRIC = "blocks_per_s"
 _ID_FIELDS = ("n", "deadline", "planner", "scenario", "app", "z", "nodes",
               "sampler_blocks", "kernel_blocks", "token_blocks",
               "cluster_blocks", "fault", "mode", "cap", "noise", "perturb",
-              "engine")
+              "engine", "mttr", "crash", "slack")
 
 # per-section defaults, overriding --threshold: event-driven simulation
 # rows (one full engine run each) wobble more than pure planner throughput
@@ -41,6 +41,7 @@ SECTION_THRESHOLDS = {
     "runtime": 0.3,
     "calibrate": 0.3,
     "engine": 0.3,
+    "failures": 0.3,
 }
 
 

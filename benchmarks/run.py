@@ -29,6 +29,11 @@ Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).  Sections:
              calibrated-vs-default planning across ground-truth model
              perturbation (asserts dominance at ≥10% deviation), online
              recalibration determinism, 10k-block loop smoke
+  failures — failure-tolerant runtime (repro.runtime.failures/recovery):
+             seeded chaos campaign (zero conservation violations, scalar=
+             vector), recovery grid (crash time × MTTR × slack; recovery
+             meets deadlines the migration-only baseline misses and never
+             strands a block), zero-failure identity row
   roofline — summary of results/roofline_sp.json (built from the dry-run)
   train    — tiny end-to-end LM training with the DV-DVFS controller
   serve    — batched decode with roofline-planned windows
@@ -917,6 +922,150 @@ def bench_calibrate(quick: bool = False):
     return rows
 
 
+def bench_failures(quick: bool = False):
+    """Failure-tolerant runtime (repro.runtime.failures / recovery).
+
+    Three sub-grids:
+
+      * chaos campaign — seeded randomized crash/fault scenarios (30 under
+        ``--quick``, 200 otherwise) through scalar AND vector engines;
+        asserts zero conservation-invariant violations (exactly-once-or-
+        reported-missed blocks, energy bookkeeping incl. burned partial
+        work, scalar/vector identity).
+      * recovery grid — crash time × MTTR × deadline slack over one crash
+        on the fastest-queue node; each cell runs the migration-only
+        baseline (no recovery ladder) against the recovery run.  Asserts
+        the recovery ladder strands no blocks in ANY cell, that every
+        permanent-crash baseline loses the orphaned queue, and that at
+        ample slack recovery meets the deadline wherever the baseline
+        misses it.
+      * zero-failure identity — a recovery-configured run with no failure
+        events is REPORT-IDENTICAL to the recovery=None run on both
+        engines (the ladder must be pure overhead-free configuration).
+    """
+    import numpy as np
+
+    from repro.cluster import NodeSpec, assign_blocks, plan_cluster
+    from repro.core import BlockInfo, FrequencyLadder, zipf_block_sizes
+    from repro.runtime import (CheckpointModel, FaultEvent, MigrationModel,
+                               NodeFailureEvent, RecoveryPolicy,
+                               RuntimeConfig, run_campaign, run_cluster)
+
+    deep = FrequencyLadder(
+        states=tuple(round(f, 2) for f in np.arange(0.35, 1.001, 0.05)))
+
+    def make(n_blocks, speeds, slack):
+        sizes = zipf_block_sizes(n_blocks, max(10 * n_blocks, 10000), z=1.0,
+                                 seed=0)
+        costs = sizes / sizes.mean() * 5.0
+        blocks = [BlockInfo(i, float(c)) for i, c in enumerate(costs)]
+        nodes = [NodeSpec(f"n{k}", speed=s, ladder=deep)
+                 for k, s in enumerate(speeds)]
+        mk = max(sum(b.est_time_fmax for b in g) / n.speed
+                 for g, n in zip(assign_blocks(blocks, nodes), nodes))
+        deadline = mk * slack
+        plan = plan_cluster(blocks, nodes, deadline, assignment="lpt")
+        return blocks, deadline, plan
+
+    rows = []
+
+    # --- chaos campaign: the tentpole acceptance gate -----------------------
+    n_scen = 30 if quick else 200
+    t0 = time.perf_counter()
+    camp = run_campaign(n_scenarios=n_scen, base_seed=0, check_vector=True)
+    wall = time.perf_counter() - t0
+    assert camp["violations"] == [], \
+        f"chaos campaign invariant violations: {camp['violations'][:3]}"
+    rows.append({"scenario": "chaos_campaign", "n": n_scen, "wall_s": wall,
+                 "blocks_per_s": n_scen / wall,  # scenarios/s, CI-guarded
+                 "violations": 0, "crashes": camp["n_crashes"],
+                 "repairs": camp["n_repairs"],
+                 "deadline_met_runs": camp["deadline_met_runs"],
+                 "runs_with_missed": camp["runs_with_missed"],
+                 "recovery_decisions": camp["recovery_decisions"]})
+    _row("failures_chaos_campaign", wall * 1e6 / n_scen,
+         f"scenarios={n_scen};violations=0;crashes={camp['n_crashes']};"
+         f"repairs={camp['n_repairs']}")
+
+    # --- recovery grid: crash time x MTTR x slack ---------------------------
+    mig = MigrationModel(latency_s_per_block=0.5, energy_j_per_record=0.005)
+    recovered_where_baseline_missed = False
+    for slack_tag, slack in (("tight", 1.6), ("ample", 2.4)):
+        blocks, deadline, plan = make(24, (1.0, 0.8, 1.25), slack)
+        for crash_frac in (0.25, 0.55):
+            for mttr_tag, mttr_frac in (("perm", None), ("short", 0.15),
+                                        ("long", 0.45)):
+                fe = NodeFailureEvent(
+                    time=crash_frac * deadline, node="n0",
+                    flavor="permanent" if mttr_frac is None else "transient",
+                    repair_s=None if mttr_frac is None
+                    else mttr_frac * deadline)
+                kw = dict(online=True, migrate=True, migration=mig,
+                          ewma_alpha=0.7, replan_threshold=0.1,
+                          log_events=False)
+                rb = run_cluster(plan, blocks, config=RuntimeConfig(**kw),
+                                 events=[fe], est_blocks=blocks)
+                rr = run_cluster(
+                    plan, blocks,
+                    config=RuntimeConfig(**kw, recovery=RecoveryPolicy(
+                        checkpoint=CheckpointModel(
+                            interval_s=0.05 * deadline))),
+                    events=[fe], est_blocks=blocks)
+                base_misses = (not rb.deadline_met) or bool(rb.missed_blocks)
+                # the ladder always finds a survivor for every orphan here
+                assert rr.missed_blocks == (), \
+                    f"recovery stranded blocks at {slack_tag}/{crash_frac}/" \
+                    f"{mttr_tag}: {rr.missed_blocks}"
+                if mttr_frac is None:
+                    # migration-only cannot see the dead node's queue
+                    assert rb.missed_blocks, \
+                        "permanent crash should strand the baseline's queue"
+                if slack_tag == "ample" and base_misses:
+                    assert rr.deadline_met, \
+                        f"recovery missed an ample-slack deadline the " \
+                        f"baseline also missed ({crash_frac}/{mttr_tag})"
+                    recovered_where_baseline_missed = True
+                salv = sum(nr.salvaged_frac for nr in rr.node_reports)
+                rows.append({"scenario": "recovery_grid",
+                             "slack": slack_tag, "crash": crash_frac,
+                             "mttr": mttr_tag,
+                             "base_met": rb.deadline_met,
+                             "base_missed": len(rb.missed_blocks),
+                             "rec_met": rr.deadline_met,
+                             "rec_missed": len(rr.missed_blocks),
+                             "rec_makespan_s": rr.makespan_s,
+                             "rec_energy_j": rr.total_energy_j,
+                             "salvaged_frac": salv,
+                             "lost_records": rr.lost_records})
+                _row(f"failures_{slack_tag}_c{crash_frac}_{mttr_tag}",
+                     rr.makespan_s * 1e6 / 24,
+                     f"base_met={rb.deadline_met};"
+                     f"base_missed={len(rb.missed_blocks)};"
+                     f"rec_met={rr.deadline_met};salv={salv:.2f}")
+    assert recovered_where_baseline_missed, \
+        "grid produced no ample-slack cell where recovery beat the baseline"
+
+    # --- zero-failure identity: the ladder is inert without crashes ---------
+    blocks, deadline, plan = make(24, (1.0, 0.8, 1.25), 1.8)
+    events = [FaultEvent(deadline * 0.4, "n1", 1.5)]
+    kw = dict(online=True, migrate=True, migration=mig, ewma_alpha=0.7,
+              replan_threshold=0.1, log_events=False)
+    rec = RecoveryPolicy(checkpoint=CheckpointModel(interval_s=1.0),
+                         use_triage=True)
+    for eng in ("scalar", "vector"):
+        plain = run_cluster(plan, blocks, config=RuntimeConfig(**kw),
+                            events=events, est_blocks=blocks, engine=eng)
+        armed = run_cluster(plan, blocks,
+                            config=RuntimeConfig(**kw, recovery=rec),
+                            events=events, est_blocks=blocks, engine=eng)
+        assert plain == armed, \
+            f"recovery config perturbed a zero-failure {eng} run"
+    rows.append({"scenario": "zero_failure_identity", "engines": 2,
+                 "identical": True})
+    _row("failures_zero_failure_identity", 0.0, "scalar=vector=plain")
+    return rows
+
+
 def bench_roofline():
     out = {}
     for tag, path in (("base", "results/roofline_sp.json"),
@@ -1013,6 +1162,7 @@ def main() -> None:
         "runtime": (bench_runtime, False),
         "engine": (lambda: bench_engine(quick=args.quick), False),
         "calibrate": (lambda: bench_calibrate(quick=args.quick), False),
+        "failures": (lambda: bench_failures(quick=args.quick), False),
         "roofline": (bench_roofline, False),
         "train": (bench_train, False),
         "serve": (bench_serve, False),

@@ -8,7 +8,11 @@
    that the static plan misses,
 3. hit it with a 4x slowdown instead — clocking up to f_max cannot recover
    that — and watch the event-driven runtime (repro.runtime) migrate queued
-   blocks to the nodes with slack and still meet the deadline.
+   blocks to the nodes with slack and still meet the deadline,
+4. crash a node permanently mid-run: without a recovery policy its orphaned
+   queue is simply lost; with one, the ladder checkpoints the in-flight
+   block, evacuates the queue to the survivors with the most slack, and the
+   cluster still meets the deadline.
 
 Run:  PYTHONPATH=src python examples/cluster_sim.py
 """
@@ -17,7 +21,8 @@ import numpy as np
 from repro.cluster import (NodeSpec, SlowdownEvent, assign_blocks,
                            plan_cluster, plan_independent, simulate_cluster)
 from repro.core import BlockInfo, FrequencyLadder, zipf_block_sizes
-from repro.runtime import RuntimeConfig, run_cluster
+from repro.runtime import (CheckpointModel, MigrationModel, NodeFailureEvent,
+                           RecoveryPolicy, RuntimeConfig, run_cluster)
 
 
 def offline_demo():
@@ -110,7 +115,58 @@ def migration_demo():
               f"{'met' if nr.finish_s <= deadline + 1e-9 else 'MISS'}")
 
 
+def crash_recovery_demo():
+    print("=== 4) Node crash mid-run: work salvage + survivor re-plan ===")
+    deep = FrequencyLadder(
+        states=tuple(round(f, 2) for f in np.arange(0.35, 1.001, 0.05)))
+    blocks = [BlockInfo(i, 5.0, records=5000.0) for i in range(24)]
+    nodes = [NodeSpec("n0", speed=1.0, ladder=deep),
+             NodeSpec("n1", speed=0.8, ladder=deep),
+             NodeSpec("n2", speed=1.25, ladder=deep)]
+    mk = max(sum(b.est_time_fmax for b in g) / n.speed
+             for g, n in zip(assign_blocks(blocks, nodes), nodes))
+    deadline = mk * 2.2
+    plan = plan_cluster(blocks, nodes, deadline, assignment="lpt")
+    crash = [NodeFailureEvent(time=0.33 * deadline, node="n0",
+                              flavor="permanent")]
+    kw = dict(online=True, migrate=True, ewma_alpha=0.7,
+              replan_threshold=0.1,
+              migration=MigrationModel(latency_s_per_block=0.5,
+                                       energy_j_per_record=0.005))
+    bare = run_cluster(plan, blocks, events=crash, est_blocks=blocks,
+                       config=RuntimeConfig(**kw))
+    rec = run_cluster(plan, blocks, events=crash, est_blocks=blocks,
+                      config=RuntimeConfig(**kw, recovery=RecoveryPolicy(
+                          checkpoint=CheckpointModel(
+                              interval_s=0.04 * deadline))))
+
+    print(f"  deadline {deadline:5.1f}s; n0 dies for good at "
+          f"t={crash[0].time:.1f}s")
+    print(f"  no recovery : makespan {bare.makespan_s:6.1f}s  "
+          f"met={bare.deadline_met}  "
+          f"lost blocks={len(bare.missed_blocks)} "
+          f"({bare.lost_records:,} records)")
+    print(f"  recovery    : makespan {rec.makespan_s:6.1f}s  "
+          f"met={rec.deadline_met}  "
+          f"lost blocks={len(rec.missed_blocks)}  "
+          f"moves={rec.n_migrations}")
+    for dec in rec.recoveries:
+        print(f"      t={dec.time:5.1f}s  {dec.node} ({dec.flavor}) -> "
+              f"{dec.action}: "
+              f"{[(mv.block_index, mv.dst) for mv in dec.moves]}")
+    print("  per-node outcome (with recovery):")
+    print("    node  blocks  in/out  salvage  busy_s  energy_j  deadline")
+    for nr in rec.node_reports:
+        state = "DOWN" if nr.crashes and not nr.repairs else \
+            ("met" if nr.finish_s <= deadline + 1e-9 else "MISS")
+        print(f"    {nr.name:4s}  {nr.n_blocks:6d}  "
+              f"{nr.migrated_in:3d}/{nr.migrated_out:<3d} "
+              f"{nr.salvaged_frac:7.2f} {nr.busy_s:7.1f}  "
+              f"{nr.energy_j:8.0f}  {state}")
+
+
 if __name__ == "__main__":
     offline_demo()
     online_demo()
     migration_demo()
+    crash_recovery_demo()

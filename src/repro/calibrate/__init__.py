@@ -24,6 +24,11 @@ traces instead:
           calibrator=...)``) it swaps a node's spec mid-run and re-plans
           the tail against recalibrated tables, not just EWMA-drifted
           estimates.
+  triage  ``classify_ratios`` — drift-CAUSE classification over a node's
+          observed/predicted ratio stream (interference vs degrading
+          hardware vs data skew); feeds the crash-recovery ladder's
+          never-wait-on-a-dying-node rule
+          (``repro.runtime.recovery.RecoveryPolicy(use_triage=True)``).
 
 See ``benchmarks/README.md`` (section ``calibrate``) for the fit-accuracy
 grid and the calibrated-vs-default planning comparison, and
@@ -35,6 +40,7 @@ from repro.calibrate.fit import (CalibrationError, CostFit, PowerFit,
 from repro.calibrate.online import OnlineCalibrator
 from repro.calibrate.trace import (CounterSample, CounterTrace,
                                    TraceRecorder, synthetic_trace)
+from repro.calibrate.triage import DriftDiagnosis, classify_ratios
 
 __all__ = [
     "CounterSample", "CounterTrace", "TraceRecorder", "synthetic_trace",
@@ -42,4 +48,5 @@ __all__ = [
     "fit_power_model", "fit_cost_model", "fit_node_speeds",
     "calibrate_nodes",
     "OnlineCalibrator",
+    "DriftDiagnosis", "classify_ratios",
 ]

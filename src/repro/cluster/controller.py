@@ -141,6 +141,9 @@ class _NodeState:
     replans: int = 0
     last_feasible: bool = True   # feasibility of the most recent re-plan
     version: int = 0             # bumped on any non-pop queue restructure
+    up: bool = True              # crashed nodes take no migrated work
+    dead_s: float = 0.0          # outage seconds (shrinks the replan budget)
+    ratios: list = dataclasses.field(default_factory=list)  # triage log
 
 
 class OnlineReplanner:
@@ -155,7 +158,8 @@ class OnlineReplanner:
     def __init__(self, plan: ClusterPlan, est_blocks=None, *,
                  base_arrays: BlockArrays | None = None,
                  replan_threshold: float = 0.15, ewma_alpha: float = 0.3,
-                 error_margin: float = 0.05, calibrator=None):
+                 error_margin: float = 0.05, calibrator=None,
+                 track_ratios: bool = False):
         if est_blocks is not None:
             self._ba = BlockArrays.from_blocks(est_blocks)
         elif base_arrays is not None:
@@ -181,6 +185,11 @@ class OnlineReplanner:
         self.error_margin = error_margin
         self.ewma_alpha = ewma_alpha
         self.calibrator = calibrator   # repro.calibrate.OnlineCalibrator
+        self.track_ratios = track_ratios  # keep per-block ratios for triage
+        # per-block remaining-work scale, SHARED with the engine
+        # (attach_work_scale): a crash-salvaged block re-runs only its
+        # un-checkpointed remainder, so every prediction must shrink with it
+        self._wscale: dict = {}
         self.replan_log: list = []
         self.recalibrations: list = []
         self._nodes: dict = {}
@@ -229,11 +238,17 @@ class OnlineReplanner:
         st.elapsed_s += observed_s
         st.done += 1
         base_pred = st.spec.block_time(self._base[b_index], b_freq)
+        if self._wscale:
+            s = self._wscale.get(b_index)
+            if s is not None:   # salvaged block: only the remainder ran
+                base_pred = base_pred * s
         ratio = observed_s / max(base_pred, 1e-12)
         # ratio stream through the straggler EWMA: mean == drift estimate,
         # planned_slot_s=1.0 makes "late vs budget" mean "ratio >> 1"
         st.detector.observe(st.done, ratio, planned_slot_s=1.0)
         st.drift = max(st.detector.mean, 1e-6)
+        if self.track_ratios:
+            st.ratios.append((st.done, ratio))
         return st
 
     def on_telemetry(self, node_name: str, observed_s: float,
@@ -319,6 +334,46 @@ class OnlineReplanner:
         """Did the node's most recent re-plan fit its remaining budget?"""
         return self._nodes[node_name].last_feasible
 
+    # --- state the runtime's failure/recovery machinery reads/edits ----------
+    def set_node_up(self, node_name: str, up: bool) -> None:
+        """Crash/repair bookkeeping: down nodes take no migrated work."""
+        self._nodes[node_name].up = up
+
+    def node_up(self, node_name: str) -> bool:
+        return self._nodes[node_name].up
+
+    def add_dead_time(self, node_name: str, seconds: float) -> None:
+        """Charge an outage against the node's remaining deadline budget:
+        ``elapsed_s`` tracks busy seconds only, so without this a repaired
+        node would re-plan against wall-clock budget it no longer has."""
+        self._nodes[node_name].dead_s += seconds
+
+    def touch(self, node_name: str) -> None:
+        """Bump the node's queue version WITHOUT restructuring it — anything
+        cached against ``queue_state`` (the vectorized engine's priced
+        queues) must rebuild after a crash re-scales or freezes the queue."""
+        self._nodes[node_name].version += 1
+
+    def attach_work_scale(self, scale: dict) -> None:
+        """Share the engine's per-block remaining-work scale (index ->
+        fraction).  The SAME dict object — checkpoint salvage updates land
+        in both at once.  Empty dict == no crash ever salvaged anything,
+        and every scale path below stays bitwise untouched."""
+        self._wscale = scale
+
+    def _scale_arr(self, idx) -> np.ndarray:
+        ws = self._wscale
+        return np.fromiter((ws.get(int(i), 1.0) for i in idx.tolist()),
+                           np.float64, count=len(idx))
+
+    def diagnose(self, node_name: str):
+        """Drift-cause triage over the node's observed/predicted ratio log
+        (``repro.calibrate.triage``).  Needs ``track_ratios=True``; with an
+        empty log the diagnosis is ``"none"`` (insufficient evidence)."""
+        from repro.calibrate.triage import classify_ratios
+        st = self._nodes[node_name]
+        return classify_ratios([r for _, r in st.ratios])
+
     def _pos_of(self, idx):
         """Base-array positions for an array of global block indices."""
         if self._ba_ident:
@@ -364,12 +419,29 @@ class OnlineReplanner:
         Python loop per block.
         """
         st = self._nodes[node_name]
+        elapsed = st.elapsed_s + st.dead_s if st.dead_s else st.elapsed_s
         if not st.queue:
-            return st.elapsed_s
+            return elapsed
         idx, freq = self.queued_arrays(node_name)
         f = st.spec.ladder.f_max if at_fmax else freq
-        terms = self._vec_block_time(st.spec, self._pos_of(idx), f) * st.drift
-        return float(np.cumsum(np.concatenate(([st.elapsed_s], terms)))[-1])
+        terms = self._vec_block_time(st.spec, self._pos_of(idx), f)
+        if self._wscale:
+            terms = terms * self._scale_arr(idx)
+        terms = terms * st.drift
+        return float(np.cumsum(np.concatenate(([elapsed], terms)))[-1])
+
+    def queued_time(self, node_name: str, *, at_fmax: bool = False) -> float:
+        """Predicted seconds of the remaining queue ALONE (no elapsed seed)
+        — what a wait-for-repair decision adds to the repair time."""
+        st = self._nodes[node_name]
+        if not st.queue:
+            return 0.0
+        idx, freq = self.queued_arrays(node_name)
+        f = st.spec.ladder.f_max if at_fmax else freq
+        terms = self._vec_block_time(st.spec, self._pos_of(idx), f)
+        if self._wscale:
+            terms = terms * self._scale_arr(idx)
+        return float(np.cumsum(terms * st.drift)[-1])
 
     def predicted_block_time(self, node_name: str, index: int,
                              rel_freq: float | None = None) -> float:
@@ -377,7 +449,12 @@ class OnlineReplanner:
         (at the node's f_max unless ``rel_freq`` is given)."""
         st = self._nodes[node_name]
         f = st.spec.ladder.f_max if rel_freq is None else rel_freq
-        return st.spec.block_time(self._base[index], f) * st.drift
+        t = st.spec.block_time(self._base[index], f)
+        if self._wscale:
+            s = self._wscale.get(index)
+            if s is not None:
+                t = t * s
+        return t * st.drift
 
     def predicted_miss(self, node_name: str, *, margin: float = 0.0) -> bool:
         """True when the node misses the deadline even at f_max everywhere.
@@ -430,8 +507,13 @@ class OnlineReplanner:
             f = d.spec.ladder.f_max
             add_t, add_e = [], []
             for p in ps:
-                base = self._base[int(idx_l[p])]
+                bidx = int(idx_l[p])
+                base = self._base[bidx]
                 t = d.spec.block_time(base, f)
+                if self._wscale:
+                    sc = self._wscale.get(bidx)
+                    if sc is not None:
+                        t = t * sc
                 add_t.append(t)
                 add_e.append(d.spec.block_energy(base, t, f))
             dq, m = d.queue, len(ps)
@@ -552,12 +634,17 @@ class OnlineReplanner:
         else:
             for i, r in enumerate(ratios.tolist()):
                 det.observe(st.done + 1 + i, r, planned_slot_s=1.0)
+        if self.track_ratios:
+            st.ratios.extend(
+                (st.done + 1 + i, r) for i, r in enumerate(ratios.tolist()))
         st.done += c
         st.drift = max(det.mean, 1e-6)
 
     # --- internal ------------------------------------------------------------
     def _replan_node(self, name: str, st: _NodeState) -> None:
         budget = self.deadline_s - st.elapsed_s
+        if st.dead_s:   # outage seconds are wall-clock budget already spent
+            budget = budget - st.dead_s
         # node-local re-estimate: base time, drift-corrected, at node speed —
         # gathered straight from the base arrays (``est * drift / speed``
         # elementwise is the same float chain the old per-block
@@ -567,8 +654,11 @@ class OnlineReplanner:
         idx, _ = self.queued_arrays(name)
         pos = self._pos_of(idx)
         ba = self._ba
+        est_loc = ba.est_time_fmax[pos]
+        if self._wscale:    # salvaged remainders re-plan at their true size
+            est_loc = est_loc * self._scale_arr(idx)
         local = BlockArrays(
-            idx, ba.est_time_fmax[pos] * st.drift / st.spec.speed,
+            idx, est_loc * st.drift / st.spec.speed,
             ba.est_rel_halfwidth[pos], ba.util[pos],
             ba.roofline.select(pos) if ba.roofline is not None else None,
             None)

@@ -23,6 +23,16 @@ discrete-event engine where four capabilities compose:
     launches clamp down the ladder or defer, clock-ups stagger until a
     finish or down-switch frees headroom; ``plan_cluster(...,
     power_cap_w=...)`` screens the same cap at plan time.
+  * **failures + recovery** — ``NodeFailureEvent`` crashes a node
+    (transient with an MTTR, or permanent) inside the same total event
+    order: in-flight work is lost to record granularity (checkpoint
+    salvage optional), open transfer windows abort, and
+    ``RecoveryPolicy`` answers with a bounded energy-aware ladder —
+    wait-for-repair, evacuate to slack, f_max blast, graceful degradation
+    that REPORTS which blocks miss instead of raising
+    (``repro.runtime.failures`` / ``repro.runtime.recovery``).  The
+    seeded chaos harness (``run_campaign``) audits conservation
+    invariants across randomized crash campaigns.
 
 ``run_cluster`` consumes ``ClusterPlanArrays`` directly (streamed-pipeline
 plans feed straight in); ``repro.cluster.simulate_cluster`` is now a thin
@@ -34,7 +44,12 @@ from repro.runtime.actuator import ActuationModel, PowerLedger
 from repro.runtime.engine import (ClusterRuntime, NodeRuntimeReport,
                                   RuntimeConfig, RuntimeReport, run_cluster)
 from repro.runtime.events import Event, EventQueue, FaultEvent
+from repro.runtime.failures import (CheckpointModel, NodeFailureEvent,
+                                    chaos_scenario, check_conservation,
+                                    run_campaign)
 from repro.runtime.migrate import MigrationModel, MigrationRecord, plan_moves
+from repro.runtime.recovery import (RecoveryDecision, RecoveryPolicy,
+                                    salvage_fraction)
 from repro.runtime.vector import VectorClusterRuntime
 
 __all__ = [
@@ -43,4 +58,7 @@ __all__ = [
     "run_cluster", "VectorClusterRuntime",
     "Event", "EventQueue", "FaultEvent",
     "MigrationModel", "MigrationRecord", "plan_moves",
+    "NodeFailureEvent", "CheckpointModel", "chaos_scenario",
+    "check_conservation", "run_campaign",
+    "RecoveryPolicy", "RecoveryDecision", "salvage_fraction",
 ]

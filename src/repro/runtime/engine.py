@@ -46,9 +46,12 @@ from repro.cluster.planner import ClusterPlan, ClusterPlanArrays
 from repro.core.soa import BlockArrays
 from repro.runtime.actuator import ActuationModel, InFlight, PowerLedger
 from repro.runtime.events import (BLOCK_FINISH, BLOCK_START, FAULT,
-                                  FREQ_SWITCH, KIND_NAMES, TELEMETRY,
-                                  WIRE_RELEASE, Event, EventQueue, FaultEvent)
+                                  FREQ_SWITCH, KIND_NAMES, NODE_DOWN,
+                                  NODE_UP, TELEMETRY, WIRE_RELEASE, Event,
+                                  EventQueue, FaultEvent)
+from repro.runtime.failures import NodeFailureEvent
 from repro.runtime.migrate import MigrationModel, plan_moves
+from repro.runtime.recovery import recover_crash, salvage_fraction
 
 __all__ = ["RuntimeConfig", "NodeRuntimeReport", "RuntimeReport",
            "ClusterRuntime", "run_cluster"]
@@ -68,6 +71,11 @@ class RuntimeConfig:
     ewma_alpha: float = 0.3
     error_margin: float = 0.05
     log_events: bool = True
+    # crash recovery (repro.runtime.recovery): how NodeFailureEvents are
+    # answered — checkpoint salvage, wait-for-repair vs evacuate ladder.
+    # None still HANDLES failures (crash kills work, repair resumes the
+    # frozen queue); it just never salvages or evacuates.
+    recovery: object | None = None     # recovery.RecoveryPolicy
     # STATEFUL sinks, unlike every other field: the recorder accumulates
     # samples and the calibrator keeps warm fit windows across calls.
     # Reusing one config object across runs therefore mixes their state
@@ -87,6 +95,9 @@ class RuntimeConfig:
                              "calibrator=...))")
         if self.power_cap_w is not None and self.power_cap_w <= 0:
             raise ValueError("power_cap_w must be positive")
+        if self.recovery is not None and not self.online:
+            raise ValueError("crash recovery needs the online controller "
+                             "(RuntimeConfig(online=True, recovery=...))")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +115,12 @@ class NodeRuntimeReport:
     migrated_in: int
     migrated_out: int
     migrate_energy_j: float = 0.0  # transfer joules charged as the SOURCE
+    crashes: int = 0               # NODE_DOWN events that landed here
+    repairs: int = 0               # NODE_UP events that landed here
+    down_s: float = 0.0            # repaired outage seconds
+    failed_busy_s: float = 0.0     # busy seconds burned by crashes
+    failed_energy_j: float = 0.0   # joules burned by crashes (lost work)
+    salvaged_frac: float = 0.0     # checkpoint-saved work fractions, summed
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +141,13 @@ class RuntimeReport:
     power_cap_w: float | None = None
     migrations: tuple = ()   # of migrate.MigrationRecord
     event_log: tuple = ()    # (time, kind_name, node_name, *data) tuples
+    n_crashes: int = 0
+    n_repairs: int = 0
+    failed_busy_s: float = 0.0       # crash-burned busy seconds, all nodes
+    failed_energy_j: float = 0.0     # crash-burned joules, all nodes
+    missed_blocks: tuple = ()        # planned indices that never finished
+    lost_records: float = 0.0        # records inside the missed blocks
+    recoveries: tuple = ()           # of recovery.RecoveryDecision
 
     def improvement_vs(self, other) -> float:
         """Fractional busy-energy improvement of self over ``other``."""
@@ -140,7 +164,10 @@ class _NodeState:
                  "fault_factor", "slow_events", "pending_target", "want_up",
                  "waiting", "finish_s", "n_switches", "switch_energy_j",
                  "migrated_in", "migrated_out", "migrate_stuck",
-                 "migrate_energy_j")
+                 "migrate_energy_j", "up", "down_since", "down_s", "crashes",
+                 "repairs", "failed_busy_s", "failed_energy_j",
+                 "salvaged_frac", "recovery_waits", "wire_open_w",
+                 "wire_open_n", "wire_stale", "gen_base")
 
     def __init__(self, spec, nid: int, idx: np.ndarray, freq: np.ndarray):
         self.spec = spec
@@ -167,6 +194,23 @@ class _NodeState:
         self.migrated_out = 0
         self.migrate_stuck = False  # last migration attempt left a miss
         self.migrate_energy_j = 0.0  # transfer joules charged as the source
+        self.up = True              # node availability (NODE_DOWN/NODE_UP)
+        self.down_since = 0.0       # crash timestamp while down
+        self.down_s = 0.0           # repaired outage seconds
+        self.crashes = 0
+        self.repairs = 0
+        self.failed_busy_s = 0.0    # busy seconds burned by crashes
+        self.failed_energy_j = 0.0  # joules burned by crashes
+        self.salvaged_frac = 0.0    # checkpoint-saved fractions, summed
+        self.recovery_waits = 0     # wait-for-repair rungs already taken
+        self.wire_open_w = 0.0      # open migration-transfer wire watts
+        self.wire_open_n = 0        # open transfer windows on this node
+        self.wire_stale = 0         # WIRE_RELEASEs voided by a crash
+        # generation floor for fresh launches: a crash-killed block may
+        # RELAUNCH (same index) while its pre-crash BLOCK_FINISH is still
+        # in the heap — launching past the killed generation keeps that
+        # stale event stale (0 == the pre-failure default, bit-compatible)
+        self.gen_base = 0
 
 
 class ClusterRuntime:
@@ -196,6 +240,7 @@ class ClusterRuntime:
         self._t_est = truth.est_time_fmax
         self._t_util = truth.util
         self._t_roof = truth.roofline
+        self._t_rec = truth.records
 
         self.nodes: list = []
         self._id_of: dict = {}
@@ -225,7 +270,7 @@ class ClusterRuntime:
         self._mig_ready: dict = {}   # block index -> earliest start on dst
 
         for ev in events:
-            if isinstance(ev, FaultEvent):
+            if isinstance(ev, (FaultEvent, NodeFailureEvent)):
                 continue  # queued at run() start
             # block-boundary slowdown: sort per node by (after_block, factor)
             # — the total order that makes same-trigger events input-order
@@ -236,6 +281,18 @@ class ClusterRuntime:
             st.slow_events.sort()
         self._fault_events = tuple(ev for ev in events
                                    if isinstance(ev, FaultEvent))
+        self._failure_events = tuple(ev for ev in events
+                                     if isinstance(ev, NodeFailureEvent))
+        self._has_failures = bool(self._failure_events)
+        # per-block remaining-work scale: checkpoint salvage shrinks a
+        # killed block's re-run to its un-checkpointed remainder.  Empty
+        # unless a crash actually salvages — every pricing path multiplies
+        # only when non-empty, keeping zero-failure runs bitwise untouched.
+        self._work_scale: dict = {}
+        # finished global indices, kept only when failures can lose blocks
+        # (set membership answers "which planned blocks never ran?")
+        self._done_idx: list = []
+        self.recoveries: list = []
 
         self.controller = None
         if config.online:
@@ -243,13 +300,17 @@ class ClusterRuntime:
             # directly, and with no explicit est_blocks the truth arrays ARE
             # the base estimates (same floats, zero conversion) — a
             # million-block run no longer materializes BlockInfo objects
+            rp = config.recovery
             self.controller = OnlineReplanner(
                 plan_obj if plan_obj is not None else cpa, est_blocks,
                 base_arrays=truth if est_blocks is None else None,
                 replan_threshold=config.replan_threshold,
                 ewma_alpha=config.ewma_alpha,
                 error_margin=config.error_margin,
-                calibrator=config.calibrator)
+                calibrator=config.calibrator,
+                track_ratios=bool(rp is not None
+                                  and getattr(rp, "use_triage", False)))
+            self.controller.attach_work_scale(self._work_scale)
 
         idle = [st.true_spec.power.p_idle for st in self.nodes]
         if config.power_cap_w is not None \
@@ -295,6 +356,25 @@ class ClusterRuntime:
             base = est / max(rel_freq, 1e-6)
         return base / node.true_spec.speed
 
+    def _scaled_true_time(self, pos: int, index: int, node: _NodeState,
+                          rel_freq: float) -> float:
+        """``_true_time`` with the crash-salvage work scale folded in: a
+        checkpoint-salvaged block re-runs only its remainder.  With no
+        salvage on record the result is the unscaled float, bitwise."""
+        t = self._true_time(pos, node, rel_freq)
+        if self._work_scale:
+            s = self._work_scale.get(index)
+            if s is not None:
+                t = t * s
+        return t
+
+    def _scale_of(self, idx) -> np.ndarray:
+        """Per-element work scale for an index array (vectorized pricing);
+        1.0 where no crash ever salvaged the block."""
+        ws = self._work_scale
+        return np.fromiter((ws.get(int(i), 1.0) for i in idx.tolist()),
+                           np.float64, count=len(idx))
+
     # --- event handlers ------------------------------------------------------
     def _log(self, time: float, kind: int, node: _NodeState, *data) -> None:
         if self.config.log_events:
@@ -332,6 +412,8 @@ class ClusterRuntime:
     def _start_block(self, now: float, st: _NodeState) -> None:
         if st.inflight is not None:
             return  # stale start (e.g. a power-release retry while busy)
+        if not st.up:
+            return  # node is down; NODE_UP re-seeds the launch
         nxt = self._next_planned(st)
         if nxt is None:
             return
@@ -380,9 +462,10 @@ class ClusterRuntime:
         st.hw_freq = f_run
 
         eff = self._count_factor(st) * st.fault_factor
-        t_full = self._true_time(pos, st, f_run) * eff
+        t_full = self._scaled_true_time(pos, index, st, f_run) * eff
         fl = InFlight(block_pos=pos, block_index=index, rel_freq=f_run,
-                      seg_start=now, seg_time=t_full, freqs=(f_run,))
+                      seg_start=now, seg_time=t_full, freqs=(f_run,),
+                      generation=st.gen_base)
         st.inflight = fl
         self.ledger.set_draw(st.nid, st.true_spec.power.power(util, f_run),
                              now)
@@ -425,6 +508,8 @@ class ClusterRuntime:
         st.done += 1
         st.finish_s = now
         st.inflight = None
+        if self._has_failures:
+            self._done_idx.append(index)
         st.want_up = None   # a cap-deferred clock-up dies with its block
         if self.controller is None:
             st.ptr += 1
@@ -510,6 +595,8 @@ class ClusterRuntime:
             self.queue.push(Event(now + latency, WIRE_RELEASE, st.nid,
                                   (wire_w,)))
             self._pending_wire += 1
+            st.wire_open_w += wire_w
+            st.wire_open_n += 1
 
     def _freq_switch(self, now: float, st: _NodeState, data: tuple) -> None:
         target = data[0]
@@ -547,7 +634,8 @@ class ClusterRuntime:
         st.hw_freq = new_f
         eff = self._count_factor(st) * st.fault_factor
         fl.seg_time = fl.remaining * (
-            self._true_time(fl.block_pos, st, new_f) * eff)
+            self._scaled_true_time(fl.block_pos, fl.block_index, st, new_f)
+            * eff)
         fl.generation += 1
         self._charge_switch(st)
         self.ledger.set_draw(st.nid, st.true_spec.power.power(util, new_f),
@@ -569,7 +657,8 @@ class ClusterRuntime:
         fl.split_at(now, st.true_spec.power, util)
         eff = self._count_factor(st) * st.fault_factor
         fl.seg_time = fl.remaining * (
-            self._true_time(fl.block_pos, st, fl.rel_freq) * eff)
+            self._scaled_true_time(fl.block_pos, fl.block_index, st,
+                                   fl.rel_freq) * eff)
         fl.generation += 1
         self.queue.push(Event(now + fl.seg_time, BLOCK_FINISH, st.nid,
                               (fl.block_index, fl.generation)))
@@ -578,9 +667,121 @@ class ClusterRuntime:
         """A migration transfer window closed: drop its wire watts."""
         wire_w = data[0]
         self._pending_wire -= 1
+        if st.wire_stale > 0:
+            # the transfer was aborted by a crash: its watts were already
+            # released at NODE_DOWN — this release is void
+            st.wire_stale -= 1
+            self._log(now, WIRE_RELEASE, st, wire_w, "stale")
+            return
+        st.wire_open_w -= wire_w
+        st.wire_open_n -= 1
         self.ledger.add_aux(st.nid, -wire_w, now)
         self._log(now, WIRE_RELEASE, st, wire_w)
         self._power_released(now)
+
+    def _node_down(self, now: float, st: _NodeState, data: tuple) -> None:
+        """A node crashed: kill the in-flight block (record-granularity
+        loss, minus checkpoint salvage), abort open transfer windows,
+        release its draw (the machine keeps pulling p_idle — the service
+        is down, the box is not unplugged), and run the recovery ladder
+        over its orphaned queue."""
+        flavor, repair_at = data
+        if not st.up:
+            # overlapping outage windows: the node is already down — the
+            # later crash is absorbed (its NODE_UP, if any, still fires
+            # and is absorbed the same way if the node already repaired)
+            self._log(now, NODE_DOWN, st, flavor, "already-down")
+            return
+        st.up = False
+        st.crashes += 1
+        st.down_since = now
+        rp = self.config.recovery
+        fl = st.inflight
+        killed = None
+        burned_busy = burned_energy = salv = 0.0
+        if fl is not None:
+            util = float(self._t_util[fl.block_pos])
+            fl.split_at(now, st.true_spec.power, util)
+            burned_busy = fl.busy_s
+            burned_energy = fl.energy_j
+            killed = fl.block_index
+            # the killed block's scheduled BLOCK_FINISH stays in the heap;
+            # any relaunch (same index!) must outrun its generation
+            st.gen_base = fl.generation + 1
+            if rp is not None and rp.checkpoint is not None:
+                salv = salvage_fraction(fl, rp.checkpoint.interval_s)
+                if salv > 0.0:
+                    prior = self._work_scale.get(killed, 1.0)
+                    self._work_scale[killed] = prior * (1.0 - salv)
+                    st.salvaged_frac += salv
+            st.inflight = None
+        st.failed_busy_s += burned_busy
+        st.failed_energy_j += burned_energy
+        st.want_up = None
+        st.waiting = False
+        st.pending_target = None
+        st.migrate_stuck = False
+        st.hw_freq = None   # power-on reset: the repaired node re-syncs
+        wire_aborted = st.wire_open_w
+        if wire_aborted > 0:
+            # open transfer windows die with the node: release their watts
+            # now and void the scheduled WIRE_RELEASEs
+            self.ledger.add_aux(st.nid, -wire_aborted, now)
+            st.wire_stale += st.wire_open_n
+            st.wire_open_w = 0.0
+            st.wire_open_n = 0
+        self.ledger.set_idle(st.nid, now)
+        self._log(now, NODE_DOWN, st, flavor, killed, burned_busy,
+                  burned_energy, salv, wire_aborted)
+        self._off_plan += 1   # any cached drift-scan continuation is void
+        ctl = self.controller
+        if ctl is not None:
+            ctl.set_node_up(st.spec.name, False)
+            ctl.touch(st.spec.name)
+            if rp is not None:
+                dec = recover_crash(ctl, st.spec.name, now, flavor=flavor,
+                                    repair_at=repair_at, policy=rp,
+                                    migration=self.config.migration,
+                                    waits_so_far=st.recovery_waits)
+                self.recoveries.append(dec)
+                if dec.action == "wait":
+                    st.recovery_waits += 1
+                for mv in dec.moves:
+                    self.migrations.append(mv)
+                    st.migrated_out += 1
+                    dst = self.nodes[self._id_of[mv.dst]]
+                    dst.migrated_in += 1
+                    # storage-pull: the RECEIVER pays the transfer energy
+                    # (the dead source cannot drive the wire), no wire draw
+                    dst.migrate_energy_j += mv.energy_j
+                    if mv.ready_s > now + 1e-12:
+                        self._mig_ready[mv.block_index] = mv.ready_s
+                    self._log(now, NODE_DOWN, st, "migrate", mv.block_index,
+                              mv.dst)
+                    if dst.inflight is None and dst.up:
+                        self.queue.push(Event(now, BLOCK_START, dst.nid))
+        self._power_released(now)
+
+    def _node_up(self, now: float, st: _NodeState, data: tuple) -> None:
+        """A transient crash repaired: account the outage, re-plan the
+        node's surviving queue with its dead time charged, and relaunch."""
+        if st.up:
+            self._log(now, NODE_UP, st, "already-up")
+            return
+        st.up = True
+        st.repairs += 1
+        down = now - st.down_since
+        st.down_s += down
+        self._log(now, NODE_UP, st, down)
+        self._off_plan += 1
+        ctl = self.controller
+        if ctl is not None:
+            ctl.set_node_up(st.spec.name, True)
+            ctl.add_dead_time(st.spec.name, down)
+            ctl.touch(st.spec.name)
+            if len(ctl.queued_arrays(st.spec.name)[0]):
+                ctl.replan_node(st.spec.name)
+        self.queue.push(Event(now, BLOCK_START, st.nid))
 
     def _power_released(self, now: float) -> None:
         """Cap headroom appeared: wake deferred launches, stagger clock-ups.
@@ -608,15 +809,28 @@ class ClusterRuntime:
                                           st.nid, (target,)))
 
     # --- main loop -----------------------------------------------------------
-    def run(self) -> RuntimeReport:
-        if self._ran:
-            raise RuntimeError("a ClusterRuntime instance runs exactly once")
-        self._ran = True
+    def _seed_queue(self) -> None:
+        """Initial events: every node's first launch, the slowdown faults,
+        and the failure timeline (a transient crash schedules its own
+        repair; a permanent one never comes back)."""
         for st in self.nodes:
             self.queue.push(Event(0.0, BLOCK_START, st.nid))
         for fe in self._fault_events:
             self.queue.push(Event(fe.time, FAULT, self._id_of[fe.node],
                                   (fe.factor,)))
+        for fe in self._failure_events:
+            nid = self._id_of[fe.node]
+            repair_at = fe.repair_at
+            self.queue.push(Event(fe.time, NODE_DOWN, nid,
+                                  (fe.flavor, repair_at)))
+            if repair_at is not None:
+                self.queue.push(Event(repair_at, NODE_UP, nid))
+
+    def run(self) -> RuntimeReport:
+        if self._ran:
+            raise RuntimeError("a ClusterRuntime instance runs exactly once")
+        self._ran = True
+        self._seed_queue()
         # BLOCK_START carries no data, so it dispatches separately
         handlers = {
             BLOCK_FINISH: self._finish_block,
@@ -624,6 +838,8 @@ class ClusterRuntime:
             FREQ_SWITCH: self._freq_switch,
             FAULT: self._fault,
             WIRE_RELEASE: self._wire_release,
+            NODE_DOWN: self._node_down,
+            NODE_UP: self._node_up,
         }
         while self.queue:
             ev = self.queue.pop()
@@ -635,13 +851,21 @@ class ClusterRuntime:
         return self._report()
 
     def _report(self) -> RuntimeReport:
+        makespan = max((st.finish_s for st in self.nodes), default=0.0)
+        if self._has_failures:
+            # a permanently-down node's outage runs to the end of the run
+            for st in self.nodes:
+                if not st.up:
+                    st.down_s += max(makespan, st.down_since) - st.down_since
         node_reports = tuple(
             NodeRuntimeReport(st.spec.name, st.busy_s, st.energy_j, st.done,
                               tuple(st.freqs), st.finish_s, st.n_switches,
                               st.switch_energy_j, st.migrated_in,
-                              st.migrated_out, st.migrate_energy_j)
+                              st.migrated_out, st.migrate_energy_j,
+                              st.crashes, st.repairs, st.down_s,
+                              st.failed_busy_s, st.failed_energy_j,
+                              st.salvaged_frac)
             for st in self.nodes)
-        makespan = max((nr.finish_s for nr in node_reports), default=0.0)
         idle = sum(max(self.deadline_s - nr.busy_s, 0.0)
                    * st.true_spec.power.p_idle
                    for nr, st in zip(node_reports, self.nodes))
@@ -650,6 +874,18 @@ class ClusterRuntime:
         # must not report an empty run as an on-time success
         planned = sum(len(npa.plan.index) for npa in self.plan.node_plans)
         complete = sum(st.done for st in self.nodes) == planned
+        missed: tuple = ()
+        lost = 0
+        if self._has_failures and not complete:
+            done_set = set(self._done_idx)
+            missed = tuple(sorted(
+                int(i) for npa in self.plan.node_plans
+                for i in npa.plan.index.tolist() if int(i) not in done_set))
+            if self._t_rec is not None:
+                for i in missed:
+                    r = self._t_rec[self._truth_pos(i)]
+                    if r is not None:
+                        lost += int(r)
         return RuntimeReport(
             planner=self.plan.planner,
             deadline_s=self.deadline_s,
@@ -670,6 +906,15 @@ class ClusterRuntime:
             power_cap_w=self.ledger.cap_w,
             migrations=tuple(self.migrations),
             event_log=tuple(self.log),
+            n_crashes=sum(nr.crashes for nr in node_reports),
+            n_repairs=sum(nr.repairs for nr in node_reports),
+            failed_busy_s=float(sum(nr.failed_busy_s
+                                    for nr in node_reports)),
+            failed_energy_j=float(sum(nr.failed_energy_j
+                                      for nr in node_reports)),
+            missed_blocks=missed,
+            lost_records=lost,
+            recoveries=tuple(self.recoveries),
         )
 
 

@@ -22,6 +22,11 @@ timestamp:
                    re-plan (and any migration) sees post-fault truth;
     WIRE_RELEASE   a completed migration transfer returns its wire draw to
                    the power ledger before new work is admitted;
+    NODE_DOWN      a crash lands after every same-instant completion has
+                   settled and been observed — a block that finishes at the
+                   crash timestamp counts, the recovery re-plan sees a
+                   correct queue;
+    NODE_UP        a repair revives the node before new work is admitted;
     BLOCK_START    new work starts last, seeing every decision above.
 """
 from __future__ import annotations
@@ -31,7 +36,8 @@ import heapq
 
 __all__ = [
     "BLOCK_FINISH", "FREQ_SWITCH", "FAULT", "TELEMETRY", "WIRE_RELEASE",
-    "BLOCK_START", "KIND_NAMES", "Event", "FaultEvent", "EventQueue",
+    "NODE_DOWN", "NODE_UP", "BLOCK_START", "KIND_NAMES", "Event",
+    "FaultEvent", "EventQueue",
 ]
 
 # kind priorities — the tie-break order at one timestamp (see module doc)
@@ -40,7 +46,9 @@ FREQ_SWITCH = 1
 FAULT = 2
 TELEMETRY = 3
 WIRE_RELEASE = 4
-BLOCK_START = 5
+NODE_DOWN = 5
+NODE_UP = 6
+BLOCK_START = 7
 
 KIND_NAMES = {
     BLOCK_FINISH: "block_finish",
@@ -48,6 +56,8 @@ KIND_NAMES = {
     FAULT: "fault",
     TELEMETRY: "telemetry",
     WIRE_RELEASE: "wire_release",
+    NODE_DOWN: "node_down",
+    NODE_UP: "node_up",
     BLOCK_START: "block_start",
 }
 
@@ -66,6 +76,11 @@ class Event:
                   unless trace emission is on);
     WIRE_RELEASE  (watts,) — a migration transfer on this (source) node
                   completed; drop its wire draw from the power ledger;
+    NODE_DOWN     (flavor, repair_at) — the node crashes: its in-flight work
+                  is lost (to the last checkpoint, if salvage is on), its
+                  queue freezes, its draw falls to idle.  ``repair_at`` is
+                  the matching NODE_UP time (None for a permanent crash);
+    NODE_UP       () — the node is repaired and may accept work again;
     BLOCK_START   () — the node should (try to) start its next queued block.
     """
 

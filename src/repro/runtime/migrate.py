@@ -144,9 +144,9 @@ def plan_moves(controller, straggler: str, now: float,
     # that drained and idled reports a finish in the past, but migrated
     # work cannot start before NOW — clamp, or a late trigger would pass
     # the guard on wall-clock-stale slack and push a previously-feasible
-    # node past the deadline
+    # node past the deadline.  Down (crashed) nodes take no work.
     pred = {nm: max(controller.predicted_finish(nm), now)
-            for nm in names if nm != straggler}
+            for nm in names if nm != straggler and controller.node_up(nm)}
     node_id = {nm: k for k, nm in enumerate(names)}
     moves: list = []
     wire_w = 0.0   # accepted moves' cumulative transfer draw this trigger

@@ -48,8 +48,8 @@ import numpy as np
 from repro.runtime.actuator import InFlight
 from repro.runtime.engine import ClusterRuntime, RuntimeConfig, RuntimeReport
 from repro.runtime.events import (BLOCK_FINISH, BLOCK_START, FAULT,
-                                  FREQ_SWITCH, KIND_NAMES, TELEMETRY,
-                                  WIRE_RELEASE, Event)
+                                  FREQ_SWITCH, KIND_NAMES, NODE_DOWN,
+                                  NODE_UP, TELEMETRY, WIRE_RELEASE, Event)
 
 __all__ = ["VectorClusterRuntime"]
 
@@ -216,15 +216,27 @@ class VectorClusterRuntime(ClusterRuntime):
                 util_q = self._t_util[pos_q]
                 f_run_q = np.full(cov, st.hw_freq) \
                     if latency > 0.0 else q_freq
+                tt_q = self._vec_true_time(pos_q, st, f_run_q)
+                bp_q = self._vec_base_pred(ctl.node_spec_of(name),
+                                           q_idx, q_freq)
+                if self._work_scale:
+                    # checkpoint-salvaged remainders: the same per-block
+                    # scale the scalar folds into _scaled_true_time and the
+                    # controller into _record — t * s with s == 1.0 is
+                    # bitwise t, so only salvaged blocks move.  Crashes
+                    # bump the controller version, so the cache re-keys
+                    # whenever the scale dict can have changed.
+                    sc_q = self._scale_of(q_idx)
+                    tt_q = tt_q * sc_q
+                    bp_q = bp_q * sc_q
                 ce = {"key": (ver, hwk), "done0": done,
                       "cov": cov, "full": cov == len(qi_full),
                       "idx": q_idx, "freq": q_freq, "pos": pos_q,
                       "f_run": f_run_q,
-                      "tt": self._vec_true_time(pos_q, st, f_run_q),
+                      "tt": tt_q,
                       "p_run": self._vec_power(st.true_spec.power, util_q,
                                                f_run_q),
-                      "bp": self._vec_base_pred(ctl.node_spec_of(name),
-                                                q_idx, q_freq),
+                      "bp": bp_q,
                       # wire membership is version-stable too: migration
                       # appends bump the dst's version, and only a queue
                       # HEAD ever leaves the wire (behind the offset)
@@ -428,6 +440,10 @@ class VectorClusterRuntime(ClusterRuntime):
         ctl = self.controller
         active = []
         for st in self.nodes:
+            if not st.up:
+                # a down node runs nothing; its NODE_UP (if any) is in the
+                # heap as a non-epoch kind and already bounds the horizon
+                continue
             if st.inflight is not None:
                 active.append(st)
             elif (ctl.next_block_brief(st.spec.name) is not None
@@ -544,6 +560,8 @@ class VectorClusterRuntime(ClusterRuntime):
                 np.concatenate(([st.energy_j], energy[:c])))[-1])
             st.freqs.extend(f_end[:c].tolist())
             st.done += c
+            if self._has_failures:
+                self._done_idx.extend(idx_all[:c].tolist())
             st.finish_s = float(times[c - 1])
             if ctl is not None:
                 ctl.commit_observations(st.spec.name, obs[:c],
@@ -570,11 +588,12 @@ class VectorClusterRuntime(ClusterRuntime):
                               rel_freq=float(f_end[c]),
                               seg_start=float(times[c - 1]),
                               seg_time=float(ch["durs"][c - 1]),
-                              freqs=(float(f_end[c]),))
+                              freqs=(float(f_end[c]),),
+                              generation=st.gen_base)
                 st.inflight = fl
                 led._draw[st.nid] = float(p_run[c - 1])
                 self.queue.push(Event(float(times[c]), BLOCK_FINISH, st.nid,
-                                      (fl.block_index, 0)))
+                                      (fl.block_index, fl.generation)))
             else:
                 st.inflight = None
                 led._draw[st.nid] = led._idle[st.nid]
@@ -607,17 +626,15 @@ class VectorClusterRuntime(ClusterRuntime):
         if self._ran:
             raise RuntimeError("a ClusterRuntime instance runs exactly once")
         self._ran = True
-        for st in self.nodes:
-            self.queue.push(Event(0.0, BLOCK_START, st.nid))
-        for fe in self._fault_events:
-            self.queue.push(Event(fe.time, FAULT, self._id_of[fe.node],
-                                  (fe.factor,)))
+        self._seed_queue()
         handlers = {
             BLOCK_FINISH: self._finish_block,
             TELEMETRY: self._telemetry,
             FREQ_SWITCH: self._freq_switch,
             FAULT: self._fault,
             WIRE_RELEASE: self._wire_release,
+            NODE_DOWN: self._node_down,
+            NODE_UP: self._node_up,
         }
         # epoch attempts only fire at QUIET BOUNDARIES — the heap head's
         # time is strictly past the last popped event, so every same-time

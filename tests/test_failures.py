@@ -1,0 +1,353 @@
+"""Failure model, recovery ladder, triage, and the chaos campaign.
+
+The contract of ``repro.runtime.failures`` / ``repro.runtime.recovery``:
+
+  (a) conservation — across seeded chaos campaigns every planned block
+      either finishes exactly once or is explicitly reported missed, the
+      event-log energy reconstructs the report's ledger (crash-burned
+      energy included), and nothing ever raises;
+  (b) bit-identity — the vector engine matches the scalar oracle (report
+      AND event log) under crashes, and a zero-failure run is bitwise
+      UNCHANGED by merely configuring recovery;
+  (c) crash-edge interleavings — a crash at the exact timestamp of a
+      pending frequency switch, a crash with a migration transfer window
+      open (source and target side), the last feasible node crashing, and
+      a repair landing after the deadline all degrade gracefully;
+  (d) salvage arithmetic — ``salvage_fraction`` is exact on hand-priced
+      segment logs;
+  (e) triage — ``classify_ratios`` separates uniform shift (interference)
+      from positive trend (degrading) from high dispersion (data skew).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.calibrate.triage import classify_ratios
+from repro.cluster.node import NodeSpec
+from repro.cluster.planner import plan_cluster
+from repro.core.energy import FrequencyLadder, PowerModel
+from repro.core.scheduler import BlockInfo
+from repro.runtime import (ActuationModel, CheckpointModel, MigrationModel,
+                           NodeFailureEvent, RecoveryPolicy, RuntimeConfig,
+                           check_conservation, run_campaign, run_cluster)
+from repro.runtime.failures import chaos_scenario
+from repro.runtime.recovery import salvage_fraction
+
+
+# --- fixtures ---------------------------------------------------------------
+
+def _cluster(n_blocks=18, k=3, slack=1.8, seed=7, drift=1.05):
+    """Round-robin spread (every node holds work — crashes always have
+    something to kill) with the deadline ``slack`` times the slowest
+    node's TRUE round-robin time."""
+    rng = np.random.default_rng(seed)
+    blocks = [BlockInfo(index=i,
+                        est_time_fmax=float(rng.uniform(0.5, 2.0)),
+                        util=float(rng.uniform(0.5, 1.0)),
+                        records=float(rng.integers(100, 1000)))
+              for i in range(n_blocks)]
+    ladder = FrequencyLadder((0.5, 0.7, 0.85, 1.0))
+    nodes = [NodeSpec(f"n{j}", ladder=ladder,
+                      power=PowerModel(p_idle=30.0, p_full=110.0, alpha=2.0),
+                      speed=1.0 + 0.1 * j)
+             for j in range(k)]
+    truth = [dataclasses.replace(b, est_time_fmax=b.est_time_fmax * drift)
+             for b in blocks]
+    per_node = [sum(t.est_time_fmax for t in truth[j::k]) / nodes[j].speed
+                for j in range(k)]
+    deadline = max(per_node) * slack
+    plan = plan_cluster(blocks, nodes, deadline_s=deadline,
+                        assignment="round_robin")
+    return blocks, truth, nodes, plan
+
+
+def _run_both(plan, truth, cfg_kwargs, events, blocks):
+    """(scalar, vector) reports from FRESH configs; asserts bit-identity."""
+    a = run_cluster(plan, truth, config=RuntimeConfig(**cfg_kwargs),
+                    events=events, est_blocks=blocks, engine="scalar")
+    v = run_cluster(plan, truth, config=RuntimeConfig(**cfg_kwargs),
+                    events=events, est_blocks=blocks, engine="vector")
+    assert a == v
+    assert a.event_log == v.event_log
+    return a, v
+
+
+# --- (a) the chaos campaign -------------------------------------------------
+
+def test_chaos_campaign_conserves():
+    """Seeded campaign: conservation, determinism, scalar==vector.  The
+    tier-1 slice runs 30 scenarios; ``benchmarks/run.py --section
+    failures`` runs the full 200 the acceptance bar names."""
+    out = run_campaign(30, base_seed=1000)
+    assert out["violations"] == []
+    assert out["n_crashes"] > 0          # the campaign actually crashed nodes
+    assert out["recovery_decisions"] > 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_scalar_vector_identity_under_crashes(seed):
+    sc = chaos_scenario(seed)
+    a = run_cluster(sc.plan, sc.truth, config=sc.config(), events=sc.events,
+                    est_blocks=sc.blocks, engine="scalar")
+    v = run_cluster(sc.plan, sc.truth, config=sc.config(), events=sc.events,
+                    est_blocks=sc.blocks, engine="vector")
+    assert a == v
+    assert a.event_log == v.event_log
+    assert check_conservation(a, sc.plan) == []
+
+
+# --- (b) zero-failure bit-identity ------------------------------------------
+
+def test_recovery_config_is_inert_without_failures():
+    """Configuring recovery (checkpoint, triage, the lot) must not move a
+    single bit of a run that never crashes."""
+    blocks, truth, nodes, plan = _cluster()
+    base = dict(online=True, migrate=True, log_events=True,
+                migration=MigrationModel(latency_s_per_block=0.5,
+                                         energy_j_per_record=0.005))
+    with_rp = dict(base, recovery=RecoveryPolicy(
+        checkpoint=CheckpointModel(interval_s=0.5), use_triage=True))
+    a, _ = _run_both(plan, truth, base, [], blocks)
+    b, _ = _run_both(plan, truth, with_rp, [], blocks)
+    assert a == b
+    assert a.event_log == b.event_log
+    assert a.n_crashes == 0 and a.missed_blocks == ()
+
+
+# --- (c) crash-edge interleavings -------------------------------------------
+
+def test_crash_at_exact_freq_switch_timestamp():
+    """A crash landing at the very timestamp of a pending FREQ_SWITCH:
+    the switch settles first (kind priority), the crash then kills the
+    block — no double accounting, oracle and vector agree."""
+    blocks, truth, nodes, plan = _cluster(seed=11)
+    cfg = dict(online=True, log_events=True,
+               actuation=ActuationModel(latency_s=0.25),
+               recovery=RecoveryPolicy())
+    clean, _ = _run_both(plan, truth, cfg, [], blocks)
+    switches = [e for e in clean.event_log if e[1] == "freq_switch"]
+    if not switches:
+        pytest.skip("scenario produced no mid-run switch to collide with")
+    t, node = float(switches[0][0]), switches[0][2]
+    ev = [NodeFailureEvent(time=t, node=node, flavor="transient",
+                           repair_s=1.0)]
+    rep, _ = _run_both(plan, truth, cfg, ev, blocks)
+    assert rep.n_crashes == 1 and rep.n_repairs == 1
+    assert check_conservation(rep, plan) == []
+
+
+def test_crash_during_transfer_aborts_wire():
+    """Crash of the migration SOURCE while its transfer window is open:
+    the wire watts are released at the crash instant and the scheduled
+    WIRE_RELEASE is voided (no double release)."""
+    blocks, truth, nodes, plan = _cluster(n_blocks=24, slack=1.3, seed=3)
+    cfg = dict(online=True, migrate=True, log_events=True,
+               migration=MigrationModel(latency_s_per_block=1.5,
+                                        energy_j_per_record=0.01),
+               recovery=RecoveryPolicy(), error_margin=0.15)
+    from repro.runtime import FaultEvent
+    base_ev = [FaultEvent(time=0.5, node="n0", factor=3.0)]
+    clean, _ = _run_both(plan, truth, cfg, base_ev, blocks)
+    open_mv = [mv for mv in clean.migrations if mv.ready_s > mv.time + 1e-9]
+    if not open_mv:
+        pytest.skip("scenario produced no transfer window to collide with")
+    mv = open_mv[0]
+    t_mid = (mv.time + mv.ready_s) / 2.0
+    for victim in (mv.src, mv.dst):        # crash each side of the wire
+        ev = base_ev + [NodeFailureEvent(time=t_mid, node=victim,
+                                         flavor="permanent")]
+        rep, _ = _run_both(plan, truth, cfg, ev, blocks)
+        assert check_conservation(rep, plan) == []
+        if victim == mv.src:
+            downs = [e for e in rep.event_log
+                     if e[1] == "node_down" and len(e) >= 9
+                     and e[2] == victim]
+            assert downs and downs[0][8] > 0.0   # wire watts aborted
+            stale = [e for e in rep.event_log
+                     if e[1] == "wire_release" and e[-1] == "stale"]
+            assert stale                          # release voided, not reapplied
+
+
+def test_last_feasible_node_crashing_degrades_gracefully():
+    """Every node permanently down mid-run: the run ENDS with a report —
+    missed blocks enumerated, no exception, both engines agree."""
+    blocks, truth, nodes, plan = _cluster(k=2, seed=5)
+    deadline = plan.deadline_s
+    cfg = dict(online=True, log_events=True,
+               recovery=RecoveryPolicy(checkpoint=CheckpointModel(0.4)))
+    ev = [NodeFailureEvent(time=0.3 * deadline, node="n0",
+                           flavor="permanent"),
+          NodeFailureEvent(time=0.5 * deadline, node="n1",
+                           flavor="permanent")]
+    rep, _ = _run_both(plan, truth, cfg, ev, blocks)
+    assert rep.missed_blocks                     # which blocks, not a raise
+    assert rep.lost_records > 0
+    assert not rep.deadline_met
+    assert check_conservation(rep, plan) == []
+    # the second crash found no survivors: graceful degradation on record
+    assert any(d.action == "stranded" for d in rep.recoveries)
+
+
+def test_repair_after_deadline_runs_late_not_lost():
+    """A lone node's transient outage whose repair lands past the deadline:
+    the frozen queue still runs to completion (late), nothing is lost."""
+    blocks, truth, nodes, plan = _cluster(k=1, slack=1.4, seed=9)
+    deadline = plan.deadline_s
+    ev = [NodeFailureEvent(time=0.5 * deadline, node="n0",
+                           flavor="transient", repair_s=deadline)]
+    cfg = dict(online=True, log_events=True, recovery=RecoveryPolicy())
+    rep, _ = _run_both(plan, truth, cfg, ev, blocks)
+    assert rep.missed_blocks == () and rep.lost_records == 0
+    assert rep.makespan_s > deadline and not rep.deadline_met
+    assert check_conservation(rep, plan) == []
+
+
+def test_wait_versus_migrate_ladder():
+    """Short MTTR + slack => rung 1 (wait); permanent crash => rung 2
+    (migrate), and the recovery meets the deadline the wait cannot."""
+    blocks, truth, nodes, plan = _cluster(n_blocks=18, k=3, slack=2.2,
+                                          seed=21)
+    deadline = plan.deadline_s
+    cfg = dict(online=True, migrate=True, log_events=True,
+               recovery=RecoveryPolicy())
+    short = [NodeFailureEvent(time=0.3 * deadline, node="n0",
+                              flavor="transient",
+                              repair_s=0.05 * deadline)]
+    rep_s, _ = _run_both(plan, truth, cfg, short, blocks)
+    assert any(d.action == "wait" for d in rep_s.recoveries)
+    perm = [NodeFailureEvent(time=0.3 * deadline, node="n0",
+                             flavor="permanent")]
+    rep_p, _ = _run_both(plan, truth, cfg, perm, blocks)
+    assert any(d.action == "migrate" for d in rep_p.recoveries)
+    assert rep_p.missed_blocks == ()     # survivors absorbed the orphans
+    for rep in (rep_s, rep_p):
+        assert check_conservation(rep, plan) == []
+
+
+def test_checkpoint_salvage_shrinks_reruns():
+    """With checkpointing, a killed block's re-run prices only its
+    remainder: total busy seconds drop vs the no-checkpoint run of the
+    same crash, and the salvaged fraction lands in the report."""
+    blocks, truth, nodes, plan = _cluster(n_blocks=12, k=2, slack=2.0,
+                                          seed=13)
+    deadline = plan.deadline_s
+    ev = [NodeFailureEvent(time=0.2 * deadline, node="n0",
+                           flavor="transient", repair_s=0.05 * deadline)]
+    base = dict(online=True, log_events=True)
+    rep_no, _ = _run_both(plan, truth,
+                          dict(base, recovery=RecoveryPolicy()), ev, blocks)
+    rep_ck, _ = _run_both(
+        plan, truth,
+        dict(base, recovery=RecoveryPolicy(
+            checkpoint=CheckpointModel(interval_s=0.02 * deadline))),
+        ev, blocks)
+    if rep_ck.failed_busy_s == 0:
+        pytest.skip("crash landed between blocks — nothing in flight")
+    salvaged = sum(nr.salvaged_frac for nr in rep_ck.node_reports)
+    if salvaged == 0:
+        pytest.skip("crash landed before the first checkpoint tick")
+    total_busy_no = sum(nr.busy_s for nr in rep_no.node_reports)
+    total_busy_ck = sum(nr.busy_s for nr in rep_ck.node_reports)
+    assert total_busy_ck < total_busy_no
+    for rep in (rep_no, rep_ck):
+        assert check_conservation(rep, plan) == []
+
+
+# --- (d) salvage arithmetic -------------------------------------------------
+
+class _FakeInflight:
+    def __init__(self, seg_log):
+        self.seg_log = seg_log
+
+
+def test_salvage_fraction_exact():
+    # one 10 s segment worth 0.8 of the block; interval 3 ticks at 3,6,9
+    # -> last tick 9 -> linear within the segment: 0.8 * 9/10
+    fl = _FakeInflight([(0.0, 10.0, 1.0, 0.8, 5.0)])
+    assert salvage_fraction(fl, 3.0) == pytest.approx(0.8 * 0.9)
+    # interval longer than the runtime: no tick landed, nothing salvaged
+    assert salvage_fraction(fl, 11.0) == 0.0
+    # two segments 4 s + 6 s at different freqs, work 0.3 / 0.4; crash at 10
+    fl2 = _FakeInflight([(0.0, 4.0, 1.0, 0.3, 2.0),
+                         (4.0, 6.0, 0.5, 0.4, 2.0)])
+    # interval 4 -> ticks 4, 8; last tick 8 sits 4 s into segment 2
+    assert salvage_fraction(fl2, 4.0) == pytest.approx(0.3 + 0.4 * (4 / 6))
+    # interval 5 -> last tick 10 == the crash instant: everything executed
+    # by then counts (both segments whole)
+    assert salvage_fraction(fl2, 5.0) == pytest.approx(0.7)
+    # interval 3 -> last tick 9, 5 s into segment 2
+    assert salvage_fraction(fl2, 3.0) == pytest.approx(0.3 + 0.4 * (5 / 6))
+    # empty log
+    assert salvage_fraction(_FakeInflight([]), 1.0) == 0.0
+
+
+# --- (e) triage -------------------------------------------------------------
+
+def test_triage_classifies_canonical_shapes():
+    rng = np.random.default_rng(0)
+    flat = [1.0 + 1e-3 * float(rng.standard_normal()) for _ in range(24)]
+    assert classify_ratios(flat).cause == "none"
+    shifted = [1.5 + 1e-3 * float(rng.standard_normal()) for _ in range(24)]
+    d = classify_ratios(shifted)
+    assert d.cause == "interference" and d.severity > 0.3
+    climbing = [1.0 + 0.06 * i for i in range(24)]
+    d = classify_ratios(climbing)
+    assert d.cause == "degrading" and d.trend > 0
+    skewed = [float(np.exp(rng.standard_normal() * 0.6)) for _ in range(48)]
+    assert classify_ratios(skewed).cause == "data_skew"
+    assert classify_ratios([1.4, 1.4]).cause == "none"   # below min_n
+    assert classify_ratios([]).n == 0
+
+
+def test_triage_vetoes_waiting_on_degrading_node():
+    """use_triage: a node whose ratio log climbs is never waited on even
+    when the repair would land in time — the ladder jumps to migrate."""
+    blocks, truth, nodes, plan = _cluster(n_blocks=60, k=3, slack=2.4,
+                                          seed=33)
+    deadline = plan.deadline_s
+    from repro.runtime import FaultEvent
+    # escalating faults on n0 make its ratio stream climb block over block
+    ev = [FaultEvent(time=f * deadline, node="n0", factor=1.2)
+          for f in (0.05, 0.12, 0.19, 0.26, 0.33, 0.40, 0.47)]
+    crash = [NodeFailureEvent(time=0.55 * deadline, node="n0",
+                              flavor="transient",
+                              repair_s=0.02 * deadline)]
+    base = dict(online=True, migrate=True, log_events=True)
+    naive, _ = _run_both(plan, truth,
+                         dict(base, recovery=RecoveryPolicy(max_waits=5)),
+                         ev + crash, blocks)
+    triaged, _ = _run_both(
+        plan, truth,
+        dict(base, recovery=RecoveryPolicy(max_waits=5, use_triage=True)),
+        ev + crash, blocks)
+    if not any(d.action == "wait" for d in naive.recoveries):
+        pytest.skip("crash resolved without a wait even naively")
+    tr = [d for d in triaged.recoveries if d.node == "n0"]
+    assert tr and tr[0].action != "wait"
+    assert tr[0].diagnosis is not None \
+        and tr[0].diagnosis.cause == "degrading"
+
+
+# --- validation -------------------------------------------------------------
+
+def test_failure_event_validation():
+    with pytest.raises(ValueError):
+        NodeFailureEvent(time=-1.0, node="n0", repair_s=1.0)
+    with pytest.raises(ValueError):
+        NodeFailureEvent(time=0.0, node="n0", flavor="transient")  # no MTTR
+    with pytest.raises(ValueError):
+        NodeFailureEvent(time=0.0, node="n0", flavor="permanent",
+                         repair_s=5.0)
+    with pytest.raises(ValueError):
+        NodeFailureEvent(time=0.0, node="n0", flavor="cosmic")
+    with pytest.raises(ValueError):
+        CheckpointModel(interval_s=0.0)
+    with pytest.raises(ValueError):
+        RecoveryPolicy(margin=1.0)
+    with pytest.raises(ValueError):
+        RecoveryPolicy(max_waits=-1)
+    with pytest.raises(ValueError):
+        RuntimeConfig(recovery=RecoveryPolicy())   # needs online=True

@@ -407,3 +407,56 @@ def test_runtime_config_validation():
         RuntimeConfig(power_cap_w=0.0)
     with pytest.raises(ValueError):
         ActuationModel(latency_s=-1.0)
+
+
+def test_cost_model_validation_rejects_negative_energy():
+    """Transfer/switch energies are joules: negative values would let a
+    planner 'gain' energy by moving or switching."""
+    from repro.runtime import MigrationModel
+    with pytest.raises(ValueError):
+        MigrationModel(energy_j_per_record=-0.01)
+    with pytest.raises(ValueError):
+        MigrationModel(latency_s_per_block=-1.0)
+    with pytest.raises(ValueError):
+        ActuationModel(switch_energy_j=-0.5)
+
+
+# --- (f) power-ledger end-of-run invariant ----------------------------------
+
+def _drained_ledger_ok(engine):
+    """Every node back at p_idle, every aux (wire) watt released."""
+    led = engine.ledger
+    for nid in range(len(engine.nodes)):
+        assert led.draw_of(nid) == led._idle[nid]
+        assert abs(led.aux_of(nid)) < 1e-9
+    assert led.total_w == pytest.approx(sum(led._idle), abs=1e-9)
+
+
+def test_power_ledger_drains_to_idle_after_run():
+    """End-of-run ledger invariant: when the queue empties, no node still
+    'draws' busy watts and no migration wire is still charged — across the
+    full feature matrix (faults, migration wire, cap, latency), crashes
+    included, on both engines."""
+    from repro.runtime import NodeFailureEvent, RecoveryPolicy
+    from repro.runtime.engine import ClusterRuntime
+    from repro.runtime.vector import VectorClusterRuntime
+    plan, blocks, events, deadline = _migration_scenario()
+    free = run_cluster(plan, blocks)
+    cfg_kw = dict(online=True, migrate=True, ewma_alpha=0.7,
+                  replan_threshold=0.1, power_cap_w=free.peak_power_w * 1.05,
+                  actuation=ActuationModel(latency_s=0.5,
+                                           switch_energy_j=1.0))
+    from repro.runtime import MigrationModel
+    cfg_kw["migration"] = MigrationModel(latency_s_per_block=1.0,
+                                         energy_j_per_record=0.01)
+    ev = events + [FaultEvent(deadline * 0.6, "n1", 1.5)]
+    ev_crash = ev + [NodeFailureEvent(time=deadline * 0.4, node="n2",
+                                      flavor="transient",
+                                      repair_s=deadline * 0.1)]
+    for cls in (ClusterRuntime, VectorClusterRuntime):
+        for events_i, rec in ((ev, None), (ev_crash, RecoveryPolicy())):
+            eng = cls(plan, blocks,
+                      config=RuntimeConfig(**cfg_kw, recovery=rec),
+                      events=events_i, est_blocks=blocks)
+            eng.run()
+            _drained_ledger_ok(eng)
