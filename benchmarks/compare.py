@@ -33,7 +33,8 @@ METRIC = "blocks_per_s"
 _ID_FIELDS = ("n", "deadline", "planner", "scenario", "app", "z", "nodes",
               "sampler_blocks", "kernel_blocks", "token_blocks",
               "cluster_blocks", "fault", "mode", "cap", "noise", "perturb",
-              "engine", "mttr", "crash", "slack")
+              "engine", "mttr", "crash", "slack", "load", "mix", "slo",
+              "tenants")
 
 # per-section defaults, overriding --threshold: event-driven simulation
 # rows (one full engine run each) wobble more than pure planner throughput
@@ -42,6 +43,7 @@ SECTION_THRESHOLDS = {
     "calibrate": 0.3,
     "engine": 0.3,
     "failures": 0.3,
+    "serving": 0.3,
 }
 
 

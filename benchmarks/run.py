@@ -51,7 +51,7 @@ import time
 
 # bumped whenever row shapes / section semantics change incompatibly;
 # benchmarks.compare refuses to diff blobs whose schemas differ
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 
 def _git_sha() -> str:
@@ -1066,6 +1066,165 @@ def bench_failures(quick: bool = False):
     return rows
 
 
+def bench_serving(quick: bool = False):
+    """Open-loop serving fabric (repro.serving).
+
+    Four sub-grids:
+
+      * sustained-overload grid — offered load x tenant mix x SLO
+        tightness, admission+shedding against the no-admission baseline.
+        Asserts the fabric's headline guarantee in EVERY cell: accepted-job
+        SLO-miss rate <= 1% no matter the offered load, and steady-tenant
+        isolation under a 10x burst — while the baseline's miss rate
+        diverges with load (asserted > 10% in the overloaded cells).
+      * drift shedding — arrivals whose true cost runs 1.5x their estimate:
+        backpressure sheds stale promises and still keeps accepted misses
+        <= 1%.
+      * overload campaign — seeded randomized scenarios (12 under
+        ``--quick``, 60 otherwise) through scalar AND vector engines;
+        asserts zero serving-conservation violations (every job
+        exactly-once accepted-and-finished / shed / rejected, runtime
+        ledger audit, two-run determinism, scalar/vector identity).
+      * zero-traffic identity — a serving run with no arrivals is bitwise
+        the closed-batch run on both engines.
+    """
+    import dataclasses
+
+    import numpy as np
+
+    from repro.cluster import NodeSpec, plan_cluster
+    from repro.core import BlockInfo, FrequencyLadder
+    from repro.pipeline import ArrivalSpec, TenantSpec
+    from repro.runtime import RuntimeConfig, run_cluster
+    from repro.serving import (ServingConfig, check_serving_conservation,
+                               run_serving, run_serving_campaign)
+
+    ladder = FrequencyLadder((0.5, 0.7, 0.85, 1.0))
+    rng = np.random.default_rng(0)
+    blocks = [BlockInfo(i, float(rng.uniform(0.3, 0.7)), util=0.8,
+                        records=100.0) for i in range(6)]
+    nodes = [NodeSpec(f"n{j}", ladder=ladder) for j in range(3)]
+    deadline = sum(b.est_time_fmax for b in blocks) / 3 * 1.8
+    plan = plan_cluster(blocks, nodes, deadline_s=deadline)
+    truth = [dataclasses.replace(b, est_time_fmax=b.est_time_fmax * 1.05)
+             for b in blocks]
+
+    def cfg():
+        return RuntimeConfig(online=True, log_events=True)
+
+    horizon, cap_hz = 40.0, 3.0   # 3 nodes digesting ~1 s jobs
+    rows = []
+
+    # --- sustained-overload grid: load x mix x SLO --------------------------
+    loads = (0.5, 3.0) if quick else (0.5, 1.5, 3.0)
+    for load in loads:
+        for mix in ("even", "burst"):
+            for slo_tag, slo in (("tight", 6.0), ("loose", 14.0)):
+                ra = load * cap_hz / 2
+                steady = TenantSpec(name="steady", rate_hz=ra, slo_s=slo,
+                                    priority=2.0, blocks_per_job=(1, 1),
+                                    block_time_s=(0.8, 1.2))
+                bkw = dict(name="noisy", rate_hz=ra, slo_s=slo, priority=1.0,
+                           blocks_per_job=(1, 1), block_time_s=(0.8, 1.2))
+                if mix == "burst":
+                    bkw.update(process="burst", burst_factor=10.0,
+                               burst_start_s=10.0, burst_end_s=20.0)
+                spec = ArrivalSpec(tenants=(steady, TenantSpec(**bkw)),
+                                   horizon_s=horizon, seed=5)
+                t0 = time.perf_counter()
+                g = run_serving(plan, truth, spec, config=cfg(),
+                                serving=ServingConfig(margin=0.2),
+                                est_blocks=blocks)
+                wall = time.perf_counter() - t0
+                naked = run_serving(
+                    plan, truth, spec, config=cfg(),
+                    serving=ServingConfig(admission=False, shedding=False),
+                    est_blocks=blocks)
+                assert check_serving_conservation(g, plan) == [], \
+                    f"serving conservation broke at {load}/{mix}/{slo_tag}"
+                assert g.accepted_miss_rate <= 0.01, \
+                    f"admission broke its promise at {load}/{mix}/" \
+                    f"{slo_tag}: miss={g.accepted_miss_rate:.3f}"
+                by = {t.tenant: t for t in g.tenants}
+                assert by["steady"].miss_rate <= 0.01, \
+                    f"isolation broke at {load}/{mix}/{slo_tag}"
+                if load >= 1.5 or mix == "burst":
+                    assert naked.accepted_miss_rate > 0.1, \
+                        f"baseline failed to collapse at {load}/{mix}/" \
+                        f"{slo_tag} — the grid is not actually overloaded"
+                rows.append({"scenario": "overload_grid", "load": load,
+                             "mix": mix, "slo": slo_tag, "tenants": 2,
+                             "blocks_per_s": len(g.jobs) / wall,  # jobs/s
+                             "jobs": len(g.jobs),
+                             "accepted": g.n_accepted,
+                             "rejected": g.n_rejected, "shed": g.n_shed,
+                             "miss_rate": g.accepted_miss_rate,
+                             "baseline_miss_rate":
+                                 naked.accepted_miss_rate,
+                             "steady_miss_rate": by["steady"].miss_rate,
+                             "wall_s": wall})
+                _row(f"serving_l{load}_{mix}_{slo_tag}",
+                     wall * 1e6 / max(len(g.jobs), 1),
+                     f"acc={g.n_accepted};rej={g.n_rejected};"
+                     f"shed={g.n_shed};miss={g.accepted_miss_rate:.3f};"
+                     f"base_miss={naked.accepted_miss_rate:.3f}")
+
+    # --- drift shedding: stale promises get shed, not missed ----------------
+    hot = ArrivalSpec(
+        tenants=(TenantSpec(name="steady", rate_hz=1.5, slo_s=6.0,
+                            priority=2.0, blocks_per_job=(1, 1),
+                            block_time_s=(0.8, 1.2)),
+                 TenantSpec(name="noisy", rate_hz=1.5, slo_s=6.0,
+                            priority=1.0, blocks_per_job=(1, 1),
+                            block_time_s=(0.8, 1.2))),
+        horizon_s=horizon, seed=5)
+    g = run_serving(plan, truth, hot, config=cfg(),
+                    serving=ServingConfig(margin=0.05), arrival_truth=1.5,
+                    est_blocks=blocks)
+    assert check_serving_conservation(g, plan) == []
+    assert g.n_shed > 0, "1.5x drift produced no backpressure sheds"
+    assert g.accepted_miss_rate <= 0.01
+    rows.append({"scenario": "drift_shedding", "arrival_truth": 1.5,
+                 "accepted": g.n_accepted, "shed": g.n_shed,
+                 "miss_rate": g.accepted_miss_rate})
+    _row("serving_drift_shedding", 0.0,
+         f"shed={g.n_shed};miss={g.accepted_miss_rate:.3f}")
+
+    # --- overload campaign: the tentpole acceptance gate --------------------
+    n_scen = 12 if quick else 60
+    t0 = time.perf_counter()
+    camp = run_serving_campaign(n_scenarios=n_scen, base_seed=0,
+                                check_vector=True)
+    wall = time.perf_counter() - t0
+    assert camp["violations"] == [], \
+        f"serving campaign violations: {camp['violations'][:3]}"
+    rows.append({"scenario": "overload_campaign", "n": n_scen,
+                 "wall_s": wall, "violations": 0,
+                 "blocks_per_s": n_scen / wall,  # scenarios/s, CI-guarded
+                 "jobs": camp["n_jobs"], "accepted": camp["n_accepted"],
+                 "rejected": camp["n_rejected"], "shed": camp["n_shed"]})
+    _row("serving_overload_campaign", wall * 1e6 / n_scen,
+         f"scenarios={n_scen};violations=0;jobs={camp['n_jobs']};"
+         f"shed={camp['n_shed']}")
+
+    # --- zero-traffic identity: no arrivals == closed batch, bitwise --------
+    quiet = ArrivalSpec(tenants=(TenantSpec(name="t", rate_hz=0.0,
+                                            slo_s=6.0),),
+                        horizon_s=horizon)
+    for eng in ("scalar", "vector"):
+        closed = run_cluster(plan, truth, config=cfg(), est_blocks=blocks,
+                             engine=eng)
+        srep = run_serving(plan, truth, quiet, config=cfg(),
+                           est_blocks=blocks, engine=eng)
+        assert srep.runtime == closed \
+            and srep.event_log == closed.event_log, \
+            f"zero-traffic serving perturbed the {eng} closed-batch run"
+    rows.append({"scenario": "zero_traffic_identity", "engines": 2,
+                 "identical": True})
+    _row("serving_zero_traffic_identity", 0.0, "scalar=vector=closed")
+    return rows
+
+
 def bench_roofline():
     out = {}
     for tag, path in (("base", "results/roofline_sp.json"),
@@ -1163,6 +1322,7 @@ def main() -> None:
         "engine": (lambda: bench_engine(quick=args.quick), False),
         "calibrate": (lambda: bench_calibrate(quick=args.quick), False),
         "failures": (lambda: bench_failures(quick=args.quick), False),
+        "serving": (lambda: bench_serving(quick=args.quick), False),
         "roofline": (bench_roofline, False),
         "train": (bench_train, False),
         "serve": (bench_serve, False),

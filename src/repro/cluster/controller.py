@@ -530,11 +530,117 @@ class OnlineReplanner:
                             q.pred_e[o:][keep], q.slot[o:][keep])
         s.version += 1
 
-    def replan_node(self, node_name: str) -> None:
-        """Re-run the tail plan for one node (no-op on a drained queue)."""
+    # --- open-loop serving interface (repro.serving) -------------------------
+    def set_horizon(self, deadline_s: float) -> None:
+        """Move the planning horizon (rolling-horizon serving: the horizon
+        follows the latest admitted job deadline).  Only affects FUTURE
+        re-plans and miss predictions — nothing already queued is touched,
+        so closed-batch runs that never call this are bitwise unchanged."""
+        if not deadline_s > 0:
+            raise ValueError("horizon must be positive")
+        self.deadline_s = float(deadline_s)
+
+    def extend_base(self, extra: BlockArrays) -> None:
+        """Append arrived blocks to the base-estimate store.
+
+        Pre-existing blocks keep their exact floats (``BlockArrays.concat``
+        copies; positions re-derive from a stable argsort), so drift ratios
+        and re-plans for already-planned work are unchanged bitwise.
+        """
+        if np.isin(extra.index, self._ba_sorted).any():
+            raise ValueError("arrived block indices collide with the base "
+                             "store")
+        self._ba = BlockArrays.concat(self._ba, extra)
+        self._ba_order = np.argsort(self._ba.index, kind="stable")
+        self._ba_sorted = self._ba.index[self._ba_order]
+        self._ba_ident = bool(np.array_equal(
+            self._ba_sorted, np.arange(len(self._ba_sorted),
+                                       dtype=np.int64)))
+        if isinstance(self._base, _LazyBase):
+            # fresh lazy view over the extended arrays: memoized entries are
+            # rebuilt on demand with the arrays' own floats
+            self._base = _LazyBase(self._ba, self._ba_sorted, self._ba_order)
+        else:
+            for b in extra.to_blocks():
+                self._base[b.index] = b
+
+    def append_blocks(self, node_name: str, indices) -> None:
+        """Append admitted blocks (already in the base store via
+        ``extend_base``) to the tail of ``node_name``'s queue, each priced
+        at the node's f_max — the same entry pricing a migrated block gets;
+        the node's own later re-plans spread slack across the grown tail."""
+        d = self._nodes[node_name]
+        f = d.spec.ladder.f_max
+        add_t, add_e = [], []
+        for bidx in indices:
+            base = self._base[int(bidx)]
+            t = d.spec.block_time(base, f)
+            if self._wscale:
+                sc = self._wscale.get(int(bidx))
+                if sc is not None:
+                    t = t * sc
+            add_t.append(t)
+            add_e.append(d.spec.block_energy(base, t, f))
+        dq, m = d.queue, len(add_t)
+        do = dq.off
+        d.queue = _SoAQueue(
+            np.concatenate((dq.idx[do:],
+                            np.fromiter((int(i) for i in indices), np.int64,
+                                        count=m))),
+            np.concatenate((dq.freq[do:], np.full(m, f))),
+            np.concatenate((dq.pred_t[do:], np.asarray(add_t))),
+            np.concatenate((dq.pred_e[do:], np.asarray(add_e))),
+            np.concatenate((dq.slot[do:], np.asarray(add_t))))
+        d.version += 1
+
+    def drop_blocks(self, node_name: str, indices) -> None:
+        """Remove QUEUED blocks from ``node_name`` (SLO-aware shedding).
+        The caller must never drop the in-flight head — shed only jobs
+        none of whose blocks have started."""
+        s = self._nodes[node_name]
+        q = s.queue
+        o = q.off
+        idx_l = q.idx[o:]
+        want = np.fromiter((int(i) for i in indices), np.int64,
+                           count=len(indices))
+        drop = np.isin(idx_l, want)
+        if int(drop.sum()) != len(set(want.tolist())):
+            missing = sorted(set(want.tolist())
+                             - set(idx_l[drop].tolist()))
+            raise KeyError(f"blocks {missing} not queued on {node_name}")
+        keep = ~drop
+        s.queue = _SoAQueue(idx_l[keep], q.freq[o:][keep],
+                            q.pred_t[o:][keep], q.pred_e[o:][keep],
+                            q.slot[o:][keep])
+        s.version += 1
+
+    def queued_pred_times(self, node_name: str) -> np.ndarray:
+        """Per-element drift-corrected predicted seconds of the remaining
+        queue (the terms ``predicted_finish`` cumsums) — the serving
+        fabric's per-job feasibility walk prefixes over these."""
+        st = self._nodes[node_name]
+        if not st.queue:
+            return np.empty(0)
+        idx, freq = self.queued_arrays(node_name)
+        terms = self._vec_block_time(st.spec, self._pos_of(idx), freq)
+        if self._wscale:
+            terms = terms * self._scale_arr(idx)
+        return terms * st.drift
+
+    def replan_node(self, node_name: str, budget_s: float | None = None,
+                    skip_head: bool = False) -> None:
+        """Re-run the tail plan for one node (no-op on a drained queue).
+
+        ``budget_s`` overrides the deadline-derived budget (rolling-horizon
+        serving plans against wall-clock slack, not ``deadline - elapsed``);
+        ``skip_head`` leaves the queue head untouched — the serving fabric
+        re-plans behind an IN-FLIGHT block, whose telemetry must still be
+        priced at the frequency it launched with.
+        """
         st = self._nodes[node_name]
         if st.queue:
-            self._replan_node(node_name, st)
+            self._replan_node(node_name, st, budget_s=budget_s,
+                              skip=1 if skip_head else 0)
 
     # --- batch interface for the vectorized runtime engine -------------------
     def queue_state(self, node_name: str) -> tuple:
@@ -641,10 +747,14 @@ class OnlineReplanner:
         st.drift = max(det.mean, 1e-6)
 
     # --- internal ------------------------------------------------------------
-    def _replan_node(self, name: str, st: _NodeState) -> None:
-        budget = self.deadline_s - st.elapsed_s
-        if st.dead_s:   # outage seconds are wall-clock budget already spent
-            budget = budget - st.dead_s
+    def _replan_node(self, name: str, st: _NodeState,
+                     budget_s: float | None = None, skip: int = 0) -> None:
+        if budget_s is None:
+            budget = self.deadline_s - st.elapsed_s
+            if st.dead_s:  # outage seconds are wall-clock budget spent
+                budget = budget - st.dead_s
+        else:
+            budget = budget_s
         # node-local re-estimate: base time, drift-corrected, at node speed —
         # gathered straight from the base arrays (``est * drift / speed``
         # elementwise is the same float chain the old per-block
@@ -652,6 +762,10 @@ class OnlineReplanner:
         # ``plan_dvfs`` is a thin wrapper over ``plan_dvfs_arrays``, so the
         # resulting queue is bitwise the object path's
         idx, _ = self.queued_arrays(name)
+        if skip:
+            if len(idx) <= skip:
+                return      # nothing behind the protected head
+            idx = idx[skip:]
         pos = self._pos_of(idx)
         ba = self._ba
         est_loc = ba.est_time_fmax[pos]
@@ -665,7 +779,17 @@ class OnlineReplanner:
         pa = plan_dvfs_arrays(local, max(budget, 1e-9), planner="global",
                               ladder=st.spec.ladder, power=st.spec.power,
                               error_margin=self.error_margin)
-        st.queue = _SoAQueue.from_plan_arrays(pa)
+        if skip:
+            q, o = st.queue, st.queue.off
+            st.queue = _SoAQueue(
+                np.concatenate((q.idx[o:o + skip], pa.index)),
+                np.concatenate((q.freq[o:o + skip], pa.rel_freq)),
+                np.concatenate((q.pred_t[o:o + skip], pa.pred_time_s)),
+                np.concatenate((q.pred_e[o:o + skip], pa.pred_energy_j)),
+                np.concatenate((q.slot[o:o + skip],
+                                np.full(len(pa.index), pa.slot_s))))
+        else:
+            st.queue = _SoAQueue.from_plan_arrays(pa)
         st.drift_at_replan = st.drift
         st.last_feasible = pa.feasible
         st.replans += 1

@@ -105,6 +105,36 @@ class BlockArrays:
                            self.est_rel_halfwidth[idx], self.util[idx], roof,
                            rec)
 
+    @classmethod
+    def concat(cls, a: "BlockArrays", b: "BlockArrays") -> "BlockArrays":
+        """Concatenate two stores (open-loop arrivals extending a base).
+
+        Pure ``np.concatenate`` copies — every pre-existing element keeps
+        its exact floats.  Mixed optional columns fill the absent side with
+        the neutral value (no roofline, zero records).
+        """
+        na, nb = len(a), len(b)
+        roof = None
+        if a.roofline is not None or b.roofline is not None:
+            def _part(r, n):
+                if r is not None:
+                    return (r.has, r.t_comp, r.t_mem, r.t_coll, r.t_fixed)
+                z = np.zeros(n)
+                return (np.zeros(n, dtype=bool), z, z, z, z)
+            pa, pb = _part(a.roofline, na), _part(b.roofline, nb)
+            roof = RooflineArrays(*(np.concatenate([x, y])
+                                    for x, y in zip(pa, pb)))
+        rec = None
+        if a.records is not None or b.records is not None:
+            rec = np.concatenate([
+                a.records if a.records is not None else np.zeros(na),
+                b.records if b.records is not None else np.zeros(nb)])
+        return cls(np.concatenate([a.index, b.index]),
+                   np.concatenate([a.est_time_fmax, b.est_time_fmax]),
+                   np.concatenate([a.est_rel_halfwidth,
+                                   b.est_rel_halfwidth]),
+                   np.concatenate([a.util, b.util]), roof, rec)
+
     def to_blocks(self) -> list:
         """Materialize ``BlockInfo`` objects (small-n interop / oracles)."""
         from repro.core.estimator import RooflineTerms, RooflineTimeModel

@@ -24,6 +24,8 @@ themselves are bit-identical to ``repro.core.sampling.sample_blocks``.
 
 Throughput/RSS numbers: ``benchmarks/run.py --section pipeline``.
 """
+from repro.pipeline.arrivals import (ArrivalSpec, JobArrival, TenantSpec,
+                                     generate_arrivals)
 from repro.pipeline.sources import synthetic_cost_chunks
 from repro.pipeline.stream import (PipelineConfig, plan_estimates,
                                    stream_estimates, stream_estimates_tokens,
@@ -31,7 +33,11 @@ from repro.pipeline.stream import (PipelineConfig, plan_estimates,
                                    token_chunk_estimates)
 
 __all__ = [
+    "ArrivalSpec",
+    "JobArrival",
     "PipelineConfig",
+    "TenantSpec",
+    "generate_arrivals",
     "plan_estimates",
     "stream_estimates",
     "stream_estimates_tokens",

@@ -46,9 +46,10 @@ from repro.cluster.planner import ClusterPlan, ClusterPlanArrays
 from repro.core.soa import BlockArrays
 from repro.runtime.actuator import ActuationModel, InFlight, PowerLedger
 from repro.runtime.events import (BLOCK_FINISH, BLOCK_START, FAULT,
-                                  FREQ_SWITCH, KIND_NAMES, NODE_DOWN,
-                                  NODE_UP, TELEMETRY, WIRE_RELEASE, Event,
-                                  EventQueue, FaultEvent)
+                                  FREQ_SWITCH, JOB_ARRIVAL, KIND_NAMES,
+                                  NODE_DOWN, NODE_UP, TELEMETRY,
+                                  WIRE_RELEASE, Event, EventQueue,
+                                  FaultEvent)
 from repro.runtime.failures import NodeFailureEvent
 from repro.runtime.migrate import MigrationModel, plan_moves
 from repro.runtime.recovery import recover_crash, salvage_fraction
@@ -235,12 +236,16 @@ class ClusterRuntime:
         self.deadline_s = cpa.deadline_s
 
         # truth lookup: global block index -> position in the truth arrays
+        self._t_index = truth.index
         self._t_order = np.argsort(truth.index, kind="stable")
         self._t_sorted = truth.index[self._t_order]
         self._t_est = truth.est_time_fmax
         self._t_util = truth.util
         self._t_roof = truth.roofline
         self._t_rec = truth.records
+        # blocks admitted past the plan (open-loop serving): counted toward
+        # run completeness; 0 on every closed-batch path
+        self._extra_planned = 0
 
         self.nodes: list = []
         self._id_of: dict = {}
@@ -374,6 +379,50 @@ class ClusterRuntime:
         ws = self._work_scale
         return np.fromiter((ws.get(int(i), 1.0) for i in idx.tolist()),
                            np.float64, count=len(idx))
+
+    def _extend_truth(self, extra: BlockArrays) -> None:
+        """Append arrived blocks to the hardware-truth lookup (open-loop
+        serving only; closed-batch runs never call this).
+
+        Pre-existing lookups keep their exact floats: the payload arrays
+        are ``np.concatenate`` copies and positions re-derive from a stable
+        argsort of the concatenated index array.
+        """
+        old_n = len(self._t_index)
+        n_new = len(extra)
+        index = np.concatenate([self._t_index, extra.index])
+        self._t_index = index
+        self._t_order = np.argsort(index, kind="stable")
+        self._t_sorted = index[self._t_order]
+        self._t_est = np.concatenate([self._t_est, extra.est_time_fmax])
+        self._t_util = np.concatenate([self._t_util, extra.util])
+        a_roof, b_roof = self._t_roof, extra.roofline
+        if a_roof is not None or b_roof is not None:
+            def _part(r, n):
+                if r is not None:
+                    return (r.has, r.t_comp, r.t_mem, r.t_coll, r.t_fixed)
+                z = np.zeros(n)
+                return (np.zeros(n, dtype=bool), z, z, z, z)
+            pa, pb = _part(a_roof, old_n), _part(b_roof, n_new)
+            from repro.core.soa import RooflineArrays
+            self._t_roof = RooflineArrays(
+                *(np.concatenate([x, y]) for x, y in zip(pa, pb)))
+        if self._t_rec is not None or extra.records is not None:
+            a = self._t_rec if self._t_rec is not None else np.zeros(old_n)
+            b = extra.records if extra.records is not None \
+                else np.zeros(n_new)
+            self._t_rec = np.concatenate([a, b])
+        self._on_truth_extended()
+
+    def _on_truth_extended(self) -> None:
+        """Hook for subclasses caching views of the truth/base arrays."""
+
+    def _job_arrival(self, now: float, st: _NodeState, data: tuple) -> None:
+        """JOB_ARRIVAL dispatch; a serving fabric must be attached
+        (``repro.serving``) — the closed-batch engine never schedules one."""
+        raise RuntimeError("JOB_ARRIVAL event without a serving fabric — "
+                           "use repro.serving.run_serving for open-loop "
+                           "arrival streams")
 
     # --- event handlers ------------------------------------------------------
     def _log(self, time: float, kind: int, node: _NodeState, *data) -> None:
@@ -840,6 +889,7 @@ class ClusterRuntime:
             WIRE_RELEASE: self._wire_release,
             NODE_DOWN: self._node_down,
             NODE_UP: self._node_up,
+            JOB_ARRIVAL: self._job_arrival,
         }
         while self.queue:
             ev = self.queue.pop()
@@ -872,7 +922,8 @@ class ClusterRuntime:
         # a run only meets the deadline if it actually ran everything — a
         # power cap that permanently defers launches (or any other stall)
         # must not report an empty run as an on-time success
-        planned = sum(len(npa.plan.index) for npa in self.plan.node_plans)
+        planned = sum(len(npa.plan.index) for npa in self.plan.node_plans) \
+            + self._extra_planned
         complete = sum(st.done for st in self.nodes) == planned
         missed: tuple = ()
         lost = 0

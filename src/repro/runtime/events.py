@@ -27,6 +27,11 @@ timestamp:
                    crash timestamp counts, the recovery re-plan sees a
                    correct queue;
     NODE_UP        a repair revives the node before new work is admitted;
+    JOB_ARRIVAL    an open-loop job arrival is admitted (or deferred, shed,
+                   rejected) against the fully settled cluster state — every
+                   same-instant completion, fault, crash, and repair has
+                   already landed, so the feasibility test prices true
+                   backlog;
     BLOCK_START    new work starts last, seeing every decision above.
 """
 from __future__ import annotations
@@ -36,8 +41,8 @@ import heapq
 
 __all__ = [
     "BLOCK_FINISH", "FREQ_SWITCH", "FAULT", "TELEMETRY", "WIRE_RELEASE",
-    "NODE_DOWN", "NODE_UP", "BLOCK_START", "KIND_NAMES", "Event",
-    "FaultEvent", "EventQueue",
+    "NODE_DOWN", "NODE_UP", "JOB_ARRIVAL", "BLOCK_START", "KIND_NAMES",
+    "Event", "FaultEvent", "EventQueue",
 ]
 
 # kind priorities — the tie-break order at one timestamp (see module doc)
@@ -48,7 +53,8 @@ TELEMETRY = 3
 WIRE_RELEASE = 4
 NODE_DOWN = 5
 NODE_UP = 6
-BLOCK_START = 7
+JOB_ARRIVAL = 7
+BLOCK_START = 8
 
 KIND_NAMES = {
     BLOCK_FINISH: "block_finish",
@@ -58,6 +64,7 @@ KIND_NAMES = {
     WIRE_RELEASE: "wire_release",
     NODE_DOWN: "node_down",
     NODE_UP: "node_up",
+    JOB_ARRIVAL: "job_arrival",
     BLOCK_START: "block_start",
 }
 
@@ -81,6 +88,9 @@ class Event:
                   queue freezes, its draw falls to idle.  ``repair_at`` is
                   the matching NODE_UP time (None for a permanent crash);
     NODE_UP       () — the node is repaired and may accept work again;
+    JOB_ARRIVAL   (job_id, attempt) — an open-loop job arrives (attempt > 0
+                  marks a deferred retry); the serving fabric decides
+                  accept / defer / reject.  ``node`` is 0 (cluster-scoped);
     BLOCK_START   () — the node should (try to) start its next queued block.
     """
 

@@ -212,9 +212,15 @@ def _planned_indices(plan) -> list:
     return out
 
 
-def check_conservation(report, plan, *, rel_tol: float = 1e-9) -> list:
+def check_conservation(report, plan, *, rel_tol: float = 1e-9,
+                       planned_extra=()) -> list:
     """Audit one run's report against its own event log; returns violation
     strings (empty == every invariant held).  Needs ``log_events=True``.
+
+    ``planned_extra`` extends the planned set with block indices admitted
+    past the plan (open-loop serving: accepted-and-not-shed arrivals) —
+    they obey the same exactly-once contract, and a shed or rejected
+    arrival that still finishes is flagged as a stray.
 
     Invariants:
       * exactly-once-or-reported-lost — every planned block index either
@@ -232,6 +238,7 @@ def check_conservation(report, plan, *, rel_tol: float = 1e-9) -> list:
     """
     errs: list = []
     planned = _planned_indices(plan)
+    planned.extend(int(i) for i in planned_extra)
     finish_count: dict = {}
     finish_energy: dict = {}
     burned: dict = {}

@@ -48,8 +48,9 @@ import numpy as np
 from repro.runtime.actuator import InFlight
 from repro.runtime.engine import ClusterRuntime, RuntimeConfig, RuntimeReport
 from repro.runtime.events import (BLOCK_FINISH, BLOCK_START, FAULT,
-                                  FREQ_SWITCH, KIND_NAMES, NODE_DOWN,
-                                  NODE_UP, TELEMETRY, WIRE_RELEASE, Event)
+                                  FREQ_SWITCH, JOB_ARRIVAL, KIND_NAMES,
+                                  NODE_DOWN, NODE_UP, TELEMETRY,
+                                  WIRE_RELEASE, Event)
 
 __all__ = ["VectorClusterRuntime"]
 
@@ -118,6 +119,24 @@ class VectorClusterRuntime(ClusterRuntime):
     def _fault(self, now, st, data):
         self._fault_ptr += 1
         super()._fault(now, st, data)
+
+    def _on_truth_extended(self):
+        """Arrived blocks replaced the truth/base arrays (open-loop serving)
+        — refresh every cached view so pricing reads the extended copies.
+        Closed-batch runs never reach this."""
+        nt = len(self._t_sorted)
+        self._t_ident = bool(np.array_equal(self._t_sorted,
+                                            np.arange(nt, dtype=np.int64)))
+        if self.controller is not None:
+            ctl = self.controller
+            self._b_sorted, self._b_order = ctl._ba_sorted, ctl._ba_order
+            self._b_est = ctl._ba.est_time_fmax
+            self._b_roof = ctl._ba.roofline
+            self._b_ident = bool(np.array_equal(
+                self._b_sorted,
+                np.arange(len(self._b_sorted), dtype=np.int64)))
+        self._arr_cache.clear()
+        self._scan_cache.clear()
 
     # --- vectorized pricing (bitwise mirrors of the scalar paths) ------------
     def _vec_true_time(self, pos, st, freq):
@@ -635,6 +654,7 @@ class VectorClusterRuntime(ClusterRuntime):
             WIRE_RELEASE: self._wire_release,
             NODE_DOWN: self._node_down,
             NODE_UP: self._node_up,
+            JOB_ARRIVAL: self._job_arrival,
         }
         # epoch attempts only fire at QUIET BOUNDARIES — the heap head's
         # time is strictly past the last popped event, so every same-time

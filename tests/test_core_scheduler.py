@@ -114,3 +114,32 @@ def test_ladder_validation():
     assert lad.lowest_feasible(0.6) == 0.75
     assert lad.lowest_feasible(0.2) == 0.5
     assert lad.floor_state(0.8) == 0.75
+
+
+def test_bucketed_scan_feasible_and_within_energy_bound():
+    """``exact=False`` (bucketed-key sorted scan): still deterministic and
+    deadline-feasible, energy within 2% of the exact greedy — and inert in
+    the ample-budget regime where the all-fits fast path resolves."""
+    from repro.core.scheduler import plan_dvfs_arrays
+    from repro.core.soa import BlockArrays
+
+    rng = np.random.default_rng(12)
+    ba = BlockArrays.build(rng.lognormal(0.0, 0.8, 2000),
+                           est_rel_halfwidth=rng.uniform(0, 0.2, 2000),
+                           util=rng.uniform(0.4, 1.0, 2000))
+    total = float(ba.est_time_fmax.sum())
+    for slack in (1.03, 1.1, 1.3):
+        dl = total * slack
+        exact = plan_dvfs_arrays(ba, dl, planner="global")
+        fast = plan_dvfs_arrays(ba, dl, planner="global", exact=False)
+        again = plan_dvfs_arrays(ba, dl, planner="global", exact=False)
+        assert np.array_equal(fast.rel_freq, again.rel_freq)
+        assert fast.feasible
+        assert float(fast.pred_time_s.sum()) <= dl + 1e-9
+        e_exact = float(exact.pred_energy_j.sum())
+        e_fast = float(fast.pred_energy_j.sum())
+        assert e_fast <= e_exact * 1.02 + 1e-9
+    # ample budget: every chain fits, both modes take the all-fits path
+    ample = plan_dvfs_arrays(ba, total * 4.0, planner="global", exact=False)
+    ref = plan_dvfs_arrays(ba, total * 4.0, planner="global")
+    assert np.array_equal(ample.rel_freq, ref.rel_freq)

@@ -1,0 +1,332 @@
+"""Open-loop serving fabric: admission, shedding, provisioning, identity.
+
+The contract of ``repro.serving`` + ``repro.pipeline.arrivals``:
+
+  (a) validation — malformed tenant/arrival/serving specs fail loudly at
+      construction (negative rates, non-positive SLOs, priority ties,
+      inverted hysteresis bands);
+  (b) zero-traffic boundary — a serving run with no arrivals (and a run
+      whose every job is rejected) is bitwise the closed-batch run on both
+      engines; empty-tenant and empty-horizon replans never raise;
+  (c) determinism + bit-identity — two runs of one spec produce identical
+      ``ServingReport``s and event logs, and the vector engine matches the
+      scalar oracle under arrivals, admission, shedding, and provisioning;
+  (d) conservation — every arrived job is exactly-once accepted-and-
+      finished, shed-and-reported, or rejected-and-reported (seeded
+      overload campaign, zero violations);
+  (e) policy — admission keeps accepted-job SLO misses rare where the
+      no-admission baseline collapses, a 10x burst from one tenant is paid
+      by that tenant (isolation), and elastic provisioning parks idle
+      nodes / wakes them against backlog with priced wake transitions.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.cluster.node import NodeSpec
+from repro.cluster.planner import plan_cluster
+from repro.core.energy import FrequencyLadder, PowerModel
+from repro.core.scheduler import BlockInfo
+from repro.pipeline import ArrivalSpec, TenantSpec, generate_arrivals
+from repro.runtime import RuntimeConfig, run_cluster
+from repro.serving import (ProvisioningPolicy, ServingConfig,
+                           check_serving_conservation, run_serving,
+                           run_serving_campaign, serving_scenario)
+
+LADDER = FrequencyLadder((0.5, 0.7, 0.85, 1.0))
+POWER = PowerModel(p_idle=30.0, p_full=110.0, alpha=2.0)
+
+
+def _cluster(k=2, n_blocks=4, seed=3, slack=2.0):
+    rng = np.random.default_rng(seed)
+    blocks = [BlockInfo(index=i,
+                        est_time_fmax=float(rng.uniform(0.3, 0.8)),
+                        util=float(rng.uniform(0.5, 1.0)),
+                        records=200.0)
+              for i in range(n_blocks)]
+    nodes = [NodeSpec(f"n{j}", ladder=LADDER, power=POWER, speed=1.0)
+             for j in range(k)]
+    deadline = sum(b.est_time_fmax for b in blocks) / k * slack
+    plan = plan_cluster(blocks, nodes, deadline_s=deadline)
+    truth = [dataclasses.replace(b, est_time_fmax=b.est_time_fmax * 1.05)
+             for b in blocks]
+    return plan, truth, blocks
+
+
+def _config():
+    return RuntimeConfig(online=True, log_events=True)
+
+
+# --- (a) validation ---------------------------------------------------------
+
+def test_tenant_spec_validation():
+    ok = dict(name="t", rate_hz=1.0, slo_s=5.0)
+    TenantSpec(**ok)
+    with pytest.raises(ValueError, match="rate_hz"):
+        TenantSpec(**{**ok, "rate_hz": -0.5})
+    with pytest.raises(ValueError, match="slo_s"):
+        TenantSpec(**{**ok, "slo_s": 0.0})
+    with pytest.raises(ValueError, match="slo_s"):
+        TenantSpec(**{**ok, "slo_s": -3.0})
+    with pytest.raises(ValueError, match="priority"):
+        TenantSpec(**{**ok, "priority": float("nan")})
+    with pytest.raises(ValueError, match="process"):
+        TenantSpec(**{**ok, "process": "fractal"})
+    with pytest.raises(ValueError, match="blocks_per_job"):
+        TenantSpec(**{**ok, "blocks_per_job": (0, 2)})
+    with pytest.raises(ValueError, match="blocks_per_job"):
+        TenantSpec(**{**ok, "blocks_per_job": (3, 2)})
+    with pytest.raises(ValueError, match="block_time_s"):
+        TenantSpec(**{**ok, "block_time_s": (0.0, 1.0)})
+    with pytest.raises(ValueError, match="burst"):
+        TenantSpec(**{**ok, "process": "burst", "burst_factor": 0.5})
+    with pytest.raises(ValueError, match="burst window"):
+        TenantSpec(**{**ok, "process": "burst", "burst_factor": 2.0,
+                      "burst_start_s": 5.0, "burst_end_s": 1.0})
+    with pytest.raises(ValueError, match="trace_times_s"):
+        TenantSpec(**{**ok, "process": "trace",
+                      "trace_times_s": (3.0, 1.0)})
+
+
+def test_arrival_spec_validation():
+    a = TenantSpec(name="a", rate_hz=1.0, slo_s=5.0, priority=1.0)
+    b = TenantSpec(name="b", rate_hz=1.0, slo_s=5.0, priority=2.0)
+    ArrivalSpec(tenants=(a, b), horizon_s=10.0)
+    with pytest.raises(ValueError, match="at least one tenant"):
+        ArrivalSpec(tenants=(), horizon_s=10.0)
+    with pytest.raises(ValueError, match="duplicate tenant"):
+        ArrivalSpec(tenants=(a, dataclasses.replace(a, priority=3.0)),
+                    horizon_s=10.0)
+    with pytest.raises(ValueError, match="priority tie"):
+        ArrivalSpec(tenants=(a, dataclasses.replace(b, priority=1.0)),
+                    horizon_s=10.0)
+    with pytest.raises(ValueError, match="horizon_s"):
+        ArrivalSpec(tenants=(a, b), horizon_s=0.0)
+
+
+def test_serving_config_validation():
+    ServingConfig()
+    with pytest.raises(ValueError, match="margin"):
+        ServingConfig(margin=1.0)
+    with pytest.raises(ValueError, match="max_defers"):
+        ServingConfig(max_defers=-1)
+    with pytest.raises(ValueError, match="backoff_frac"):
+        ServingConfig(backoff_frac=0.0)
+    with pytest.raises(ValueError, match="quota_frac"):
+        ServingConfig(quota_frac=0.0)
+    with pytest.raises(ValueError, match="hysteresis"):
+        ProvisioningPolicy(park_below=0.8, wake_above=0.5)
+    with pytest.raises(ValueError, match="min_awake"):
+        ProvisioningPolicy(min_awake=0)
+    with pytest.raises(ValueError, match="wake latency"):
+        ProvisioningPolicy(wake_latency_s=-1.0)
+
+
+def test_run_serving_requires_online_and_log():
+    plan, truth, blocks = _cluster()
+    spec = ArrivalSpec(tenants=(TenantSpec(name="t", rate_hz=0.5,
+                                           slo_s=6.0),),
+                       horizon_s=4.0)
+    with pytest.raises(ValueError, match="online"):
+        run_serving(plan, truth, spec, config=RuntimeConfig(log_events=True))
+    with pytest.raises(ValueError, match="log_events"):
+        run_serving(plan, truth, spec,
+                    config=RuntimeConfig(online=True, log_events=False))
+    with pytest.raises(ValueError, match="engine"):
+        run_serving(plan, truth, spec, config=_config(), engine="quantum")
+
+
+# --- arrival generation -----------------------------------------------------
+
+def test_generate_arrivals_deterministic_and_ordered():
+    spec = ArrivalSpec(
+        tenants=(TenantSpec(name="a", rate_hz=0.8, slo_s=5.0, priority=2.0),
+                 TenantSpec(name="b", rate_hz=0.5, slo_s=8.0, priority=1.0,
+                            process="burst", burst_factor=4.0,
+                            burst_start_s=5.0, burst_end_s=10.0)),
+        horizon_s=30.0, seed=11)
+    one = generate_arrivals(spec)
+    two = generate_arrivals(spec)
+    assert one == two
+    assert [j.job_id for j in one] == list(range(len(one)))
+    keys = [(j.time, -j.priority, j.tenant) for j in one]
+    assert keys == sorted(keys)
+    for j in one:
+        assert j.deadline_s > j.time and len(j.block_times) >= 1
+
+
+def test_adding_a_tenant_never_perturbs_another():
+    a = TenantSpec(name="a", rate_hz=0.7, slo_s=5.0, priority=2.0)
+    b = TenantSpec(name="b", rate_hz=0.9, slo_s=4.0, priority=1.0)
+    solo = generate_arrivals(ArrivalSpec(tenants=(a,), horizon_s=25.0,
+                                         seed=3))
+    both = generate_arrivals(ArrivalSpec(tenants=(a, b), horizon_s=25.0,
+                                         seed=3))
+    mine = [(j.time, j.block_times) for j in both if j.tenant == "a"]
+    assert mine == [(j.time, j.block_times) for j in solo]
+
+
+def test_trace_process_replays_times():
+    tr = TenantSpec(name="t", rate_hz=0.0, slo_s=5.0, process="trace",
+                    trace_times_s=(1.0, 2.5, 9.0, 99.0))
+    jobs = generate_arrivals(ArrivalSpec(tenants=(tr,), horizon_s=10.0))
+    assert [j.time for j in jobs] == [1.0, 2.5, 9.0]  # horizon clips
+
+
+# --- (b) zero-traffic boundary ----------------------------------------------
+
+@pytest.mark.parametrize("engine", ["scalar", "vector"])
+def test_no_arrivals_is_bitwise_closed_batch(engine):
+    plan, truth, blocks = _cluster()
+    quiet = ArrivalSpec(tenants=(TenantSpec(name="t", rate_hz=0.0,
+                                            slo_s=5.0),),
+                        horizon_s=10.0)
+    closed = run_cluster(plan, truth, config=_config(), est_blocks=blocks,
+                         engine=engine)
+    srep = run_serving(plan, truth, quiet, config=_config(),
+                       est_blocks=blocks, engine=engine)
+    assert srep.runtime == closed
+    assert srep.event_log == closed.event_log
+    assert srep.jobs == () and srep.n_accepted == 0
+
+
+@pytest.mark.parametrize("engine", ["scalar", "vector"])
+def test_all_rejected_is_closed_batch_plus_log_rows(engine):
+    plan, truth, blocks = _cluster()
+    # 5 s jobs against a 1 s SLO: nothing is ever feasible
+    hopeless = ArrivalSpec(
+        tenants=(TenantSpec(name="t", rate_hz=0.8, slo_s=1.0,
+                            blocks_per_job=(1, 1),
+                            block_time_s=(5.0, 5.0)),),
+        horizon_s=5.0)
+    closed = run_cluster(plan, truth, config=_config(), est_blocks=blocks,
+                         engine=engine)
+    srep = run_serving(plan, truth, hopeless, config=_config(),
+                       serving=ServingConfig(max_defers=0),
+                       est_blocks=blocks, engine=engine)
+    assert srep.n_accepted == 0 and srep.n_shed == 0
+    assert srep.n_rejected == len(srep.jobs) > 0
+    kept = tuple(r for r in srep.event_log if r[1] != "job_arrival")
+    assert kept == closed.event_log
+    stripped = dataclasses.replace(srep.runtime, event_log=())
+    assert stripped == dataclasses.replace(closed, event_log=())
+
+
+def test_empty_horizon_and_empty_tenant_replans_do_not_raise():
+    plan, truth, blocks = _cluster()
+    tiny = ArrivalSpec(tenants=(TenantSpec(name="t", rate_hz=50.0,
+                                           slo_s=4.0),),
+                       horizon_s=1e-6)
+    rep = run_serving(plan, truth, tiny, config=_config(),
+                      est_blocks=blocks)
+    assert check_serving_conservation(rep, plan) == []
+
+
+# --- (c) determinism + scalar/vector identity --------------------------------
+
+@pytest.mark.parametrize("seed", [1, 5, 17])
+def test_two_run_determinism_and_vector_identity(seed):
+    sc = serving_scenario(seed)
+
+    def _one(engine):
+        return run_serving(sc.plan, sc.truth, sc.arrivals,
+                           config=sc.config(), serving=sc.serving,
+                           arrival_truth=sc.arrival_truth, events=sc.events,
+                           est_blocks=sc.blocks, engine=engine)
+
+    a = _one("scalar")
+    b = _one("scalar")
+    v = _one("vector")
+    assert a == b and a.event_log == b.event_log
+    assert a == v and a.event_log == v.event_log
+
+
+# --- (d) conservation -------------------------------------------------------
+
+def test_serving_campaign_conserves():
+    summary = run_serving_campaign(8, base_seed=100)
+    assert summary["violations"] == []
+    assert summary["n_jobs"] > 0 and summary["n_accepted"] > 0
+
+
+# --- (e) policy behavior ----------------------------------------------------
+
+def _overload_spec(burst=False):
+    steady = TenantSpec(name="steady", rate_hz=0.25, slo_s=10.0,
+                        priority=2.0, blocks_per_job=(1, 1),
+                        block_time_s=(0.8, 1.2))
+    if burst:
+        noisy = TenantSpec(name="noisy", rate_hz=0.25, slo_s=6.0,
+                           priority=1.0, blocks_per_job=(1, 1),
+                           block_time_s=(0.8, 1.2), process="burst",
+                           burst_factor=20.0, burst_start_s=8.0,
+                           burst_end_s=14.0)
+    else:
+        noisy = TenantSpec(name="noisy", rate_hz=2.5, slo_s=10.0,
+                           priority=1.0, blocks_per_job=(1, 1),
+                           block_time_s=(0.8, 1.2))
+    return ArrivalSpec(tenants=(steady, noisy), horizon_s=30.0, seed=2)
+
+
+def test_admission_contains_overload_baseline_collapses():
+    plan, truth, blocks = _cluster(k=2)
+    spec = _overload_spec()
+    guarded = run_serving(plan, truth, spec, config=_config(),
+                          serving=ServingConfig(margin=0.15),
+                          est_blocks=blocks)
+    naked = run_serving(
+        plan, truth, spec, config=_config(),
+        serving=ServingConfig(admission=False, shedding=False),
+        est_blocks=blocks)
+    assert check_serving_conservation(guarded, plan) == []
+    # 5x offered load: the baseline accepts everything and misses wholesale,
+    # admission keeps every promise it makes
+    assert naked.n_accepted == len(naked.jobs)
+    assert naked.accepted_miss_rate > 0.3
+    assert guarded.n_rejected + guarded.n_shed > 0
+    assert guarded.accepted_miss_rate <= 0.01
+
+
+def test_isolation_burst_tenant_pays_for_its_burst():
+    plan, truth, blocks = _cluster(k=2)
+    spec = _overload_spec(burst=True)
+    rep = run_serving(plan, truth, spec, config=_config(),
+                      serving=ServingConfig(margin=0.15),
+                      est_blocks=blocks)
+    assert check_serving_conservation(rep, plan) == []
+    by = {t.tenant: t for t in rep.tenants}
+    steady, noisy = by["steady"], by["noisy"]
+    # the burster's 10x spike is paid in ITS rejects/sheds; the steady
+    # tenant keeps its SLOs
+    assert noisy.rejected + noisy.shed > 0
+    assert steady.miss_rate <= 0.01
+    assert steady.rejected + steady.shed <= max(1, steady.arrived // 4)
+
+
+def test_provisioning_parks_idle_and_wakes_against_backlog():
+    plan, truth, blocks = _cluster(k=3, n_blocks=3)
+    # a thin trickle (parks the drained nodes), then a pile-up (wakes them)
+    trickle = TenantSpec(name="t", rate_hz=0.0, slo_s=12.0, process="trace",
+                         blocks_per_job=(1, 1), block_time_s=(1.0, 1.0),
+                         trace_times_s=(2.0, 4.0, 6.0) + tuple(
+                             10.0 + 0.05 * i for i in range(10)))
+    spec = ArrivalSpec(tenants=(trickle,), horizon_s=30.0)
+    pol = ProvisioningPolicy(wake_latency_s=0.2, wake_energy_j=5.0,
+                             park_below=0.25, wake_above=0.75, window_s=4.0)
+    cfg = ServingConfig(provisioning=pol)
+
+    def _one(engine):
+        return run_serving(plan, truth, spec, config=_config(), serving=cfg,
+                           est_blocks=blocks, engine=engine)
+
+    a = _one("scalar")
+    v = _one("vector")
+    assert a == v and a.event_log == v.event_log
+    actions = [act for (_, _, act) in a.provisioning]
+    assert "park" in actions and "wake" in actions
+    n_wakes = actions.count("wake")
+    assert a.wake_energy_j == pytest.approx(5.0 * n_wakes)
+    assert any(s > 0 for _, s in a.parked_s)
+    assert a.parked_saved_j > 0
+    assert check_serving_conservation(a, plan) == []
