@@ -34,7 +34,7 @@ _ID_FIELDS = ("n", "deadline", "planner", "scenario", "app", "z", "nodes",
               "sampler_blocks", "kernel_blocks", "token_blocks",
               "cluster_blocks", "fault", "mode", "cap", "noise", "perturb",
               "engine", "mttr", "crash", "slack", "load", "mix", "slo",
-              "tenants")
+              "tenants", "metrics", "events", "stage")
 
 # per-section defaults, overriding --threshold: event-driven simulation
 # rows (one full engine run each) wobble more than pure planner throughput
@@ -44,6 +44,7 @@ SECTION_THRESHOLDS = {
     "engine": 0.3,
     "failures": 0.3,
     "serving": 0.3,
+    "obs": 0.3,
 }
 
 

@@ -51,7 +51,7 @@ import time
 
 # bumped whenever row shapes / section semantics change incompatibly;
 # benchmarks.compare refuses to diff blobs whose schemas differ
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 
 def _git_sha() -> str:
@@ -613,6 +613,41 @@ def bench_runtime():
     return rows
 
 
+def _fleet_scenario(n_blocks, n_nodes, speed_step):
+    """The everything-on fleet scenario (faults, migration + wire energy,
+    power cap, online recalibration) shared by the engine and obs sections
+    — rng seed 0, so every caller sees the identical workload."""
+    import numpy as np
+
+    from repro.cluster import NodeSpec
+    from repro.core import FrequencyLadder, PowerModel
+    from repro.core.soa import BlockArrays
+    from repro.runtime import (ActuationModel, FaultEvent, MigrationModel,
+                               RuntimeConfig)
+
+    rng = np.random.default_rng(0)
+    est = rng.uniform(0.2, 2.0, n_blocks)
+    blocks = BlockArrays.build(
+        est, util=rng.uniform(0.5, 1.0, n_blocks),
+        records=rng.integers(100, 2000, n_blocks).astype(float))
+    ladder = FrequencyLadder((0.6, 0.8, 1.0))
+    nodes = [NodeSpec(f"n{k}", ladder=ladder,
+                      power=PowerModel(p_idle=40.0, p_full=160.0,
+                                       alpha=2.0),
+                      speed=1.0 + speed_step * k)
+             for k in range(n_nodes)]
+    deadline = float(est.sum()) / n_nodes * 1.15
+    events = [FaultEvent(time=deadline * 0.2, node="n3", factor=1.4),
+              FaultEvent(time=deadline * 0.5, node="n7", factor=1.3)]
+    cfg = RuntimeConfig(
+        online=True, migrate=True, actuation=ActuationModel(),
+        migration=MigrationModel(latency_s_per_block=1.0,
+                                 energy_j_per_record=0.001),
+        power_cap_w=n_nodes * 40.0 + 0.9 * n_nodes * 120.0,
+        log_events=False)
+    return blocks, nodes, deadline, events, cfg
+
+
 def bench_engine(quick: bool = False):
     """Vectorized vs scalar event engine (repro.runtime.vector).
 
@@ -626,38 +661,10 @@ def bench_engine(quick: bool = False):
       * 1M blocks x 100 nodes (skipped by --quick): plan + vectorized run
         end-to-end; the scalar oracle is not run at this scale.
     """
-    import numpy as np
-
-    from repro.cluster import NodeSpec
     from repro.cluster.planner import plan_cluster_arrays
-    from repro.core import FrequencyLadder, PowerModel
-    from repro.core.soa import BlockArrays
-    from repro.runtime import (ActuationModel, FaultEvent, MigrationModel,
-                               RuntimeConfig, run_cluster)
+    from repro.runtime import run_cluster
 
-    def scenario(n_blocks, n_nodes, speed_step):
-        rng = np.random.default_rng(0)
-        est = rng.uniform(0.2, 2.0, n_blocks)
-        blocks = BlockArrays.build(
-            est, util=rng.uniform(0.5, 1.0, n_blocks),
-            records=rng.integers(100, 2000, n_blocks).astype(float))
-        ladder = FrequencyLadder((0.6, 0.8, 1.0))
-        nodes = [NodeSpec(f"n{k}", ladder=ladder,
-                          power=PowerModel(p_idle=40.0, p_full=160.0,
-                                           alpha=2.0),
-                          speed=1.0 + speed_step * k)
-                 for k in range(n_nodes)]
-        deadline = float(est.sum()) / n_nodes * 1.15
-        events = [FaultEvent(time=deadline * 0.2, node="n3", factor=1.4),
-                  FaultEvent(time=deadline * 0.5, node="n7", factor=1.3)]
-        cfg = RuntimeConfig(
-            online=True, migrate=True, actuation=ActuationModel(),
-            migration=MigrationModel(latency_s_per_block=1.0,
-                                     energy_j_per_record=0.001),
-            power_cap_w=n_nodes * 40.0 + 0.9 * n_nodes * 120.0,
-            log_events=False)
-        return blocks, nodes, deadline, events, cfg
-
+    scenario = _fleet_scenario
     rows = []
 
     # --- 100k x 16: vector vs the scalar oracle, same scenario --------------
@@ -709,6 +716,84 @@ def bench_engine(quick: bool = False):
     _row("engine_1m_end_to_end", total * 1e6 / n,
          f"blocks_per_s={n / total:,.0f};plan_s={plan_s:.1f};"
          f"run_s={run_s:.1f};moves={rep.n_migrations}")
+    return rows
+
+
+def bench_obs(quick: bool = False):
+    """Observability overhead + reconstruction throughput (repro.obs).
+
+    Overhead grid: the engine section's everything-on fleet scenario with
+    the streaming aggregator on vs off, per engine, at 10k (and 100k
+    unless --quick) blocks — event log off, so the wall delta is purely
+    the inline metrics feed.  ``overhead_frac`` is on/off − 1; the CI
+    obs-smoke job separately pins the 100k metrics+ring configuration
+    under 5%.  Then, on the full event log: span-forest reconstruction
+    and Chrome-trace export throughput.
+    """
+    import dataclasses
+
+    from repro import obs
+    from repro.cluster.planner import plan_cluster_arrays
+    from repro.runtime import run_cluster
+
+    rows = []
+    sizes = [(10_000, 16)] if quick else [(10_000, 16), (100_000, 16)]
+
+    for n, k in sizes:
+        blocks, nodes, deadline, events, cfg = _fleet_scenario(n, k, 0.02)
+        plan = plan_cluster_arrays(blocks, nodes, deadline_s=deadline)
+        for engine in ("vector", "scalar"):
+            base_wall = None
+            for metrics in ("off", "on"):
+                mx = obs.StreamingMetrics() if metrics == "on" else None
+                c = dataclasses.replace(cfg, metrics=mx)
+                t0 = time.perf_counter()
+                rep = run_cluster(plan, blocks, config=c, events=events,
+                                  engine=engine)
+                wall = time.perf_counter() - t0
+                row = {"scenario": "overhead", "stage": "run", "n": n,
+                       "nodes": k, "engine": engine, "metrics": metrics,
+                       "events": "off", "wall_s": wall,
+                       "blocks_per_s": n / wall,
+                       "makespan_s": rep.makespan_s}
+                if metrics == "off":
+                    base_wall = wall
+                else:
+                    row["overhead_frac"] = wall / base_wall - 1.0
+                rows.append(row)
+                _row(f"obs_{n // 1000}k_{engine}_metrics_{metrics}",
+                     wall * 1e6 / n,
+                     f"blocks_per_s={n / wall:,.0f};"
+                     + (f"overhead={row['overhead_frac']:+.1%}"
+                        if metrics == "on" else "baseline"))
+
+    # span reconstruction + export on the full event log (largest size)
+    n, k = sizes[-1]
+    blocks, nodes, deadline, events, cfg = _fleet_scenario(n, k, 0.02)
+    cfg = dataclasses.replace(cfg, log_events=True)
+    plan = plan_cluster_arrays(blocks, nodes, deadline_s=deadline)
+    rep = run_cluster(plan, blocks, config=cfg, events=events,
+                      engine="vector")
+    n_rows = len(rep.event_log)
+    t0 = time.perf_counter()
+    spans = obs.build_spans(rep.event_log)
+    span_wall = time.perf_counter() - t0
+    rows.append({"scenario": "spans", "stage": "build_spans", "n": n,
+                 "nodes": k, "engine": "vector", "events": "full",
+                 "wall_s": span_wall, "blocks_per_s": n / span_wall,
+                 "rows_per_s": n_rows / span_wall})
+    _row("obs_build_spans", span_wall * 1e6 / n,
+         f"rows_per_s={n_rows / span_wall:,.0f};log_rows={n_rows}")
+    t0 = time.perf_counter()
+    doc = obs.to_chrome_trace(rep, spans=spans)
+    export_wall = time.perf_counter() - t0
+    assert obs.validate_chrome_trace(doc) == []
+    rows.append({"scenario": "spans", "stage": "chrome_export", "n": n,
+                 "nodes": k, "engine": "vector", "events": "full",
+                 "wall_s": export_wall, "blocks_per_s": n / export_wall,
+                 "trace_events": len(doc["traceEvents"])})
+    _row("obs_chrome_export", export_wall * 1e6 / n,
+         f"trace_events={len(doc['traceEvents'])};validated=True")
     return rows
 
 
@@ -1320,6 +1405,7 @@ def main() -> None:
         "cluster": (bench_cluster, False),
         "runtime": (bench_runtime, False),
         "engine": (lambda: bench_engine(quick=args.quick), False),
+        "obs": (lambda: bench_obs(quick=args.quick), False),
         "calibrate": (lambda: bench_calibrate(quick=args.quick), False),
         "failures": (lambda: bench_failures(quick=args.quick), False),
         "serving": (lambda: bench_serving(quick=args.quick), False),

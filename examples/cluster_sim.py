@@ -26,6 +26,7 @@ import numpy as np
 from repro.cluster import (NodeSpec, SlowdownEvent, assign_blocks,
                            plan_cluster, plan_independent, simulate_cluster)
 from repro.core import BlockInfo, FrequencyLadder, zipf_block_sizes
+from repro.obs import StreamingMetrics, format_table, node_rows, tenant_rows
 from repro.runtime import (CheckpointModel, MigrationModel, NodeFailureEvent,
                            RecoveryPolicy, RuntimeConfig, run_cluster)
 
@@ -98,8 +99,10 @@ def migration_demo():
     static = run_cluster(plan, blocks, events=events)
     online = run_cluster(plan, blocks, events=events, est_blocks=blocks,
                          config=RuntimeConfig(online=True, **kw))
+    mx = StreamingMetrics()
     mig = run_cluster(plan, blocks, events=events, est_blocks=blocks,
-                      config=RuntimeConfig(online=True, migrate=True, **kw))
+                      config=RuntimeConfig(online=True, migrate=True,
+                                           metrics=mx, **kw))
 
     print(f"  deadline {deadline:5.1f}s; n0 slows 4x mid-run")
     print(f"  static        : makespan {static.makespan_s:6.1f}s  "
@@ -112,12 +115,16 @@ def migration_demo():
         print(f"      t={mv.time:5.1f}s  block {mv.block_index:2d}  "
               f"{mv.src} -> {mv.dst}")
     print("  per-node outcome (with migration):")
-    print("    node  blocks  in/out  busy_s  finish_s  energy_j  deadline")
-    for nr in mig.node_reports:
-        print(f"    {nr.name:4s}  {nr.n_blocks:6d}  "
-              f"{nr.migrated_in:3d}/{nr.migrated_out:<3d} "
-              f"{nr.busy_s:7.1f}  {nr.finish_s:8.1f}  {nr.energy_j:8.0f}  "
-              f"{'met' if nr.finish_s <= deadline + 1e-9 else 'MISS'}")
+    print(format_table(node_rows(mig),
+                       [("node", "node", "s"), ("blocks", "blocks", "d"),
+                        ("in", "in", "d"), ("out", "out", "d"),
+                        ("busy_s", "busy_s", ".1f"),
+                        ("finish_s", "finish_s", ".1f"),
+                        ("energy_j", "energy_j", ".0f"),
+                        ("state", "deadline", "s")]))
+    snap = mx.snapshot()
+    print(f"  streamed inline: peak draw {snap['peak_power_w']:.0f} W, "
+          f"block SLO attainment {snap['slo_attainment']:.1%}")
 
 
 def crash_recovery_demo():
@@ -160,14 +167,13 @@ def crash_recovery_demo():
               f"{dec.action}: "
               f"{[(mv.block_index, mv.dst) for mv in dec.moves]}")
     print("  per-node outcome (with recovery):")
-    print("    node  blocks  in/out  salvage  busy_s  energy_j  deadline")
-    for nr in rec.node_reports:
-        state = "DOWN" if nr.crashes and not nr.repairs else \
-            ("met" if nr.finish_s <= deadline + 1e-9 else "MISS")
-        print(f"    {nr.name:4s}  {nr.n_blocks:6d}  "
-              f"{nr.migrated_in:3d}/{nr.migrated_out:<3d} "
-              f"{nr.salvaged_frac:7.2f} {nr.busy_s:7.1f}  "
-              f"{nr.energy_j:8.0f}  {state}")
+    print(format_table(node_rows(rec),
+                       [("node", "node", "s"), ("blocks", "blocks", "d"),
+                        ("in", "in", "d"), ("out", "out", "d"),
+                        ("salvage", "salvage", ".2f"),
+                        ("busy_s", "busy_s", ".1f"),
+                        ("energy_j", "energy_j", ".0f"),
+                        ("state", "deadline", "s")]))
 
 
 def overload_serving_demo():
@@ -202,13 +208,15 @@ def overload_serving_demo():
 
     print(f"  two tenants at ~0.8 jobs/s each on 3 nodes; 'bursty' spikes "
           f"10x for t=10..20s")
-    print("                 tenant   arrived  accepted  rejected  shed  "
-          "slo_miss  miss_rate")
-    for tag, rep in (("accept-all", naked), ("admission+shed", guarded)):
-        for ts in rep.tenants:
-            print(f"  {tag:>14s}  {ts.tenant:>6s}   {ts.arrived:6d}  "
-                  f"{ts.accepted:8d}  {ts.rejected:8d}  {ts.shed:4d}  "
-                  f"{ts.slo_miss:8d}  {ts.miss_rate:8.1%}")
+    cols = [("policy", "policy", "s"), ("tenant", "tenant", "s"),
+            ("arrived", "arrived", "d"), ("accepted", "accepted", "d"),
+            ("rejected", "rejected", "d"), ("shed", "shed", "d"),
+            ("slo_miss", "slo_miss", "d"), ("miss_rate", "miss_rate", ".1%")]
+    rows = [dict(r, policy=tag)
+            for tag, rep in (("accept-all", naked),
+                             ("admission+shed", guarded))
+            for r in tenant_rows(rep)]
+    print(format_table(rows, cols, indent="  "))
     print(f"  accept-all     : every job admitted, miss rate "
           f"{naked.accepted_miss_rate:.1%} — the burst sinks BOTH tenants")
     print(f"  admission+shed : miss rate {guarded.accepted_miss_rate:.1%}; "

@@ -80,6 +80,17 @@ class CounterTrace:
         safe = np.where(self.dur_s > 0, self.dur_s, 1.0)
         return np.where(self.dur_s > 0, self.energy_j / safe, 0.0)
 
+    def freq_residency(self) -> tuple:
+        """Seconds spent at each hardware frequency, as sorted
+        ``(freq, seconds)`` pairs — the DVFS residency histogram the
+        observability exporters and per-node tables reuse (one counter
+        sample per executed block segment makes this exact)."""
+        if not len(self):
+            return ()
+        freqs, inv = np.unique(self.freq, return_inverse=True)
+        secs = np.bincount(inv, weights=self.dur_s, minlength=len(freqs))
+        return tuple((float(f), float(s)) for f, s in zip(freqs, secs))
+
     def node_names(self) -> tuple:
         """Distinct node names, in first-appearance order."""
         seen: dict = {}

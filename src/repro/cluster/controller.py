@@ -330,6 +330,11 @@ class OnlineReplanner:
         """The node's remaining BlockPlans (head first), as a copy."""
         return self._nodes[node_name].queue.blocks()
 
+    def queue_depths(self) -> dict:
+        """Remaining queued blocks per node, ``{name: count}`` in node
+        order — the observability layer's queue-depth gauge seed."""
+        return {name: len(ns.queue) for name, ns in self._nodes.items()}
+
     def node_feasible(self, node_name: str) -> bool:
         """Did the node's most recent re-plan fit its remaining budget?"""
         return self._nodes[node_name].last_feasible

@@ -1,0 +1,31 @@
+"""Fleet observatory: spans, streaming metrics, exporters, attribution.
+
+Four views of one run, all derived from the same deterministic event
+stream the runtime engines emit (scalar and vector logs are
+bitwise-identical, so every artifact here is too):
+
+* :mod:`repro.obs.spans` — per-block / per-job lifecycle span trees
+  reconstructed from the full event log;
+* :mod:`repro.obs.metrics` — ``StreamingMetrics``, the bounded-memory
+  inline aggregator (``RuntimeConfig(metrics=...)``) plus the post-hoc
+  table helpers the examples print;
+* :mod:`repro.obs.export` — Chrome-trace/Perfetto JSON, Prometheus text
+  exposition, JSONL;
+* :mod:`repro.obs.explain` — ``explain_miss`` / ``explain_energy``
+  decompositions that sum *exactly* to the observed wall / joules.
+"""
+from repro.obs.explain import explain_energy, explain_miss
+from repro.obs.export import (to_chrome_trace, to_jsonl, to_prometheus,
+                              validate_chrome_trace, write_chrome_trace,
+                              write_jsonl)
+from repro.obs.metrics import (StreamingMetrics, format_table, node_rows,
+                               tenant_rows)
+from repro.obs.spans import Span, build_job_spans, build_spans, flatten
+
+__all__ = [
+    "Span", "build_spans", "build_job_spans", "flatten",
+    "StreamingMetrics", "node_rows", "tenant_rows", "format_table",
+    "to_chrome_trace", "write_chrome_trace", "validate_chrome_trace",
+    "to_prometheus", "to_jsonl", "write_jsonl",
+    "explain_miss", "explain_energy",
+]

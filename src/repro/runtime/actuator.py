@@ -110,7 +110,7 @@ class PowerLedger:
     """
 
     def __init__(self, idle_draws, cap_w: float | None,
-                 record: bool = False):
+                 record: bool = False, observer=None):
         self._draw = list(idle_draws)   # per-node current watts
         self._idle = list(idle_draws)
         self._aux = [0.0] * len(self._draw)  # additive non-compute watts
@@ -118,6 +118,10 @@ class PowerLedger:
         self.cap_w = cap_w
         self.peak_w = self.total_w
         self._record = record
+        # streaming observer: called as observer(now, total_w) on every
+        # change — the inline metrics feed (repro.obs).  Unlike ``samples``
+        # it holds no per-change memory here; bounding is the observer's job.
+        self._obs = observer
         self.samples: list = []         # (time, total_w), when recording
 
     def draw_of(self, node: int) -> float:
@@ -152,6 +156,8 @@ class PowerLedger:
         self.peak_w = max(self.peak_w, self.total_w)
         if self._record:
             self.samples.append((now, self.total_w))
+        if self._obs is not None:
+            self._obs(now, self.total_w)
 
     def set_draw(self, node: int, watts: float, now: float) -> None:
         self.total_w += watts - self._draw[node]
@@ -159,6 +165,8 @@ class PowerLedger:
         self.peak_w = max(self.peak_w, self.total_w)
         if self._record:
             self.samples.append((now, self.total_w))
+        if self._obs is not None:
+            self._obs(now, self.total_w)
 
     def set_idle(self, node: int, now: float) -> None:
         self.set_draw(node, self._idle[node], now)

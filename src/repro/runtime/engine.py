@@ -48,8 +48,8 @@ from repro.runtime.actuator import ActuationModel, InFlight, PowerLedger
 from repro.runtime.events import (BLOCK_FINISH, BLOCK_START, FAULT,
                                   FREQ_SWITCH, JOB_ARRIVAL, KIND_NAMES,
                                   NODE_DOWN, NODE_UP, TELEMETRY,
-                                  WIRE_RELEASE, Event, EventQueue,
-                                  FaultEvent)
+                                  WIRE_RELEASE, Event, EventLogSink,
+                                  EventQueue, FaultEvent)
 from repro.runtime.failures import NodeFailureEvent
 from repro.runtime.migrate import MigrationModel, plan_moves
 from repro.runtime.recovery import recover_crash, salvage_fraction
@@ -72,6 +72,17 @@ class RuntimeConfig:
     ewma_alpha: float = 0.3
     error_margin: float = 0.05
     log_events: bool = True
+    # event-log retention: "full" keeps every row (the default, unchanged),
+    # "ring:N" is the flight recorder (last N rows, dropped count reported),
+    # "off" keeps none.  Only "full" logs are replayable — the serving
+    # fabric and the failure audits read the whole log.  Ignored entirely
+    # when log_events=False.
+    event_log: str = "full"
+    # inline streaming-metrics sink (repro.obs.StreamingMetrics): fed from
+    # the handlers + the power ledger while the run executes, without
+    # materializing the event log.  STATEFUL, like trace/calibrator below:
+    # construct a fresh one per run.
+    metrics: object | None = None
     # crash recovery (repro.runtime.recovery): how NodeFailureEvents are
     # answered — checkpoint salvage, wait-for-repair vs evacuate ladder.
     # None still HANDLES failures (crash kills work, repair resumes the
@@ -99,6 +110,22 @@ class RuntimeConfig:
         if self.recovery is not None and not self.online:
             raise ValueError("crash recovery needs the online controller "
                              "(RuntimeConfig(online=True, recovery=...))")
+        self.ring_capacity()   # validates the event_log mode string
+
+    def ring_capacity(self) -> int | None:
+        """Ring size for ``event_log="ring:N"``; None for full/off."""
+        mode = self.event_log
+        if mode in ("full", "off"):
+            return None
+        if mode.startswith("ring:"):
+            try:
+                n = int(mode[5:])
+            except ValueError:
+                n = 0
+            if n > 0:
+                return n
+        raise ValueError(f"unknown event_log mode {mode!r} "
+                         "(pick 'full', 'ring:N', or 'off')")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,6 +176,10 @@ class RuntimeReport:
     missed_blocks: tuple = ()        # planned indices that never finished
     lost_records: float = 0.0        # records inside the missed blocks
     recoveries: tuple = ()           # of recovery.RecoveryDecision
+    # (time, total_w) cluster-draw steps, recorded when the full event log
+    # is on — the piecewise-constant power track the exporters draw
+    power_samples: tuple = ()
+    events_dropped: int = 0          # ring-evicted rows (0 for full/off)
 
     def improvement_vs(self, other) -> float:
         """Fractional busy-energy improvement of self over ``other``."""
@@ -323,10 +354,23 @@ class ClusterRuntime:
             raise ValueError(
                 f"power cap {config.power_cap_w} W is below the cluster's "
                 f"idle floor {sum(idle)} W — nothing can run")
-        self.ledger = PowerLedger(idle, config.power_cap_w,
-                                  record=config.log_events)
+        # event-log retention: full mode stays a plain list (zero hot-path
+        # indirection), ring mode is the flight recorder, off logs nothing.
+        ring_n = config.ring_capacity()
+        self._log_on = config.log_events and config.event_log != "off"
+        # power samples are only recorded for replayable (full) logs — the
+        # ring/off modes exist to bound memory, and the streaming metrics
+        # sink carries the bounded power timeline instead
+        record = config.log_events and config.event_log == "full"
+        self._mx = config.metrics
+        if self._mx is not None:
+            self._mx.bind(self)
+        self.ledger = PowerLedger(
+            idle, config.power_cap_w, record=record,
+            observer=(self._mx.on_power if self._mx is not None else None))
         self.queue = EventQueue()
-        self.log: list = []
+        self.log = EventLogSink(ring_n) if (self._log_on
+                                            and ring_n is not None) else []
         self.migrations: list = []
         self._pending_tel = 0    # TELEMETRY events pushed but not handled
         self._pending_wire = 0   # WIRE_RELEASE events pushed but not handled
@@ -426,7 +470,7 @@ class ClusterRuntime:
 
     # --- event handlers ------------------------------------------------------
     def _log(self, time: float, kind: int, node: _NodeState, *data) -> None:
-        if self.config.log_events:
+        if self._log_on:
             self.log.append((time, KIND_NAMES[kind], node.spec.name) + data)
 
     def _next_planned(self, st: _NodeState):
@@ -499,6 +543,8 @@ class ClusterRuntime:
             if f_run is None:
                 st.waiting = True
                 self._log(now, BLOCK_START, st, "deferred", index)
+                if self._mx is not None:
+                    self._mx.on_defer(now, st.nid)
                 return
             if f_run != f_launch:
                 # cap clamp: the block runs off its planned duration, so any
@@ -519,6 +565,8 @@ class ClusterRuntime:
         self.ledger.set_draw(st.nid, st.true_spec.power.power(util, f_run),
                              now)
         self._log(now, BLOCK_START, st, index, f_run)
+        if self._mx is not None:
+            self._mx.on_launch(now, st.nid, index, f_run)
         self.queue.push(Event(now + t_full, BLOCK_FINISH, st.nid,
                               (index, fl.generation)))
 
@@ -564,6 +612,8 @@ class ClusterRuntime:
             st.ptr += 1
         self.ledger.set_idle(st.nid, now)
         self._log(now, BLOCK_FINISH, st, index, block_busy, block_energy)
+        if self._mx is not None:
+            self._mx.on_finish(now, st.nid, index, block_busy, block_energy)
         self._power_released(now)
         if self.controller is not None:
             self.queue.push(Event(now, TELEMETRY, st.nid,
@@ -633,6 +683,8 @@ class ClusterRuntime:
                 # transfer latency: the block may not launch before ready_s
                 self._mig_ready[mv.block_index] = mv.ready_s
             self._log(now, TELEMETRY, st, "migrate", mv.block_index, mv.dst)
+            if self._mx is not None:
+                self._mx.on_migrate(now, st.nid, dst.nid, mv.energy_j)
             if dst.inflight is None:
                 # a drained (or deferred) target got work: wake it
                 self.queue.push(Event(now, BLOCK_START, dst.nid))
@@ -782,6 +834,8 @@ class ClusterRuntime:
         self.ledger.set_idle(st.nid, now)
         self._log(now, NODE_DOWN, st, flavor, killed, burned_busy,
                   burned_energy, salv, wire_aborted)
+        if self._mx is not None:
+            self._mx.on_crash(now, st.nid, burned_busy, burned_energy)
         self._off_plan += 1   # any cached drift-scan continuation is void
         ctl = self.controller
         if ctl is not None:
@@ -807,6 +861,8 @@ class ClusterRuntime:
                         self._mig_ready[mv.block_index] = mv.ready_s
                     self._log(now, NODE_DOWN, st, "migrate", mv.block_index,
                               mv.dst)
+                    if self._mx is not None:
+                        self._mx.on_migrate(now, st.nid, dst.nid, mv.energy_j)
                     if dst.inflight is None and dst.up:
                         self.queue.push(Event(now, BLOCK_START, dst.nid))
         self._power_released(now)
@@ -822,6 +878,8 @@ class ClusterRuntime:
         down = now - st.down_since
         st.down_s += down
         self._log(now, NODE_UP, st, down)
+        if self._mx is not None:
+            self._mx.on_repair(now, st.nid, down)
         self._off_plan += 1
         ctl = self.controller
         if ctl is not None:
@@ -937,7 +995,7 @@ class ClusterRuntime:
                     r = self._t_rec[self._truth_pos(i)]
                     if r is not None:
                         lost += int(r)
-        return RuntimeReport(
+        rep = RuntimeReport(
             planner=self.plan.planner,
             deadline_s=self.deadline_s,
             makespan_s=makespan,
@@ -966,7 +1024,13 @@ class ClusterRuntime:
             missed_blocks=missed,
             lost_records=lost,
             recoveries=tuple(self.recoveries),
+            power_samples=tuple(self.ledger.samples),
+            events_dropped=(self.log.dropped
+                            if isinstance(self.log, EventLogSink) else 0),
         )
+        if self._mx is not None:
+            self._mx.on_run_end(rep)
+        return rep
 
 
 def run_cluster(

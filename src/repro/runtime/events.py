@@ -36,13 +36,14 @@ timestamp:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
 
 __all__ = [
     "BLOCK_FINISH", "FREQ_SWITCH", "FAULT", "TELEMETRY", "WIRE_RELEASE",
     "NODE_DOWN", "NODE_UP", "JOB_ARRIVAL", "BLOCK_START", "KIND_NAMES",
-    "Event", "FaultEvent", "EventQueue",
+    "Event", "FaultEvent", "EventQueue", "EventLogSink",
 ]
 
 # kind priorities — the tie-break order at one timestamp (see module doc)
@@ -113,6 +114,57 @@ class FaultEvent:
     time: float
     node: str
     factor: float
+
+
+class EventLogSink:
+    """Flight-recorder event log: a bounded ring that keeps the LAST ``n``
+    rows pushed (``RuntimeConfig(event_log="ring:N")``).
+
+    List-compatible where the engine writes (``append`` / ``extend``) and
+    reads (iteration, ``len``, ``tuple(...)``), plus a ``pushed`` counter so
+    ``dropped`` reports how many rows the ring evicted.  A full-fidelity log
+    stays a plain list (the hot path pays no indirection); ``"off"`` never
+    builds rows at all — this class only ever backs the ring mode.
+
+    The vectorized engine may skip *materializing* rows it can prove would
+    be immediately evicted (a commit batch longer than the ring); it
+    accounts for them through ``skip`` so ``pushed``/``dropped`` match the
+    scalar engine's exactly.
+    """
+
+    __slots__ = ("capacity", "pushed", "_ring")
+
+    def __init__(self, capacity: int):
+        if capacity <= 0:
+            raise ValueError("ring capacity must be a positive integer")
+        self.capacity = capacity
+        self.pushed = 0
+        self._ring: collections.deque = collections.deque(maxlen=capacity)
+
+    def append(self, row) -> None:
+        self.pushed += 1
+        self._ring.append(row)
+
+    def extend(self, rows) -> None:
+        if not isinstance(rows, (list, tuple)):
+            rows = list(rows)
+        self.pushed += len(rows)
+        self._ring.extend(rows)
+
+    def skip(self, n: int) -> None:
+        """Account ``n`` rows that were pushed-and-evicted without ever
+        being materialized (vector-engine fast path)."""
+        self.pushed += n
+
+    @property
+    def dropped(self) -> int:
+        return self.pushed - len(self._ring)
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    def __iter__(self):
+        return iter(self._ring)
 
 
 class EventQueue:

@@ -562,9 +562,19 @@ class VectorClusterRuntime(ClusterRuntime):
         # --- commit: ledger first, then per-node state, log last ------------
         led.total_w = float(totals[-1])
         led.peak_w = max(led.peak_w, float(totals[1:].max()))
-        if self.config.log_events:
+        if led._record:
             led.samples.extend(zip(time_s.tolist(), totals[1:].tolist()))
-        entries = [] if self.config.log_events else None
+        if self._mx is not None:
+            self._mx.on_power_batch(time_s, totals[1:])
+        entries = [] if self._log_on else None
+        # flight-recorder mode: rows deeper than the ring capacity in this
+        # commit are evicted unread — materialize only each chain's tail
+        # (a contiguous suffix of its sorted event sequence) and account
+        # the rest through the sink's pushed counter
+        ring_n = None
+        if entries is not None and not isinstance(self.log, list):
+            ring_n = self.log.capacity
+        skipped = 0
         for ch in chains:
             c = ch["c"]
             if c == 0:
@@ -616,24 +626,39 @@ class VectorClusterRuntime(ClusterRuntime):
             else:
                 st.inflight = None
                 led._draw[st.nid] = led._idle[st.nid]
+            if self._mx is not None:
+                self._mx.commit_chain(st.nid, times, obs, energy, f_end,
+                                      c, lam)
             if entries is not None:
                 nid = st.nid
+                i0 = 0
+                if ring_n is not None and c > ring_n + 2:
+                    # keep >= ring_n trailing events of this chain: element
+                    # i's events all land at times in [times[i-1], times[i]],
+                    # so elements >= i0 are a sorted-suffix superset of the
+                    # chain's last ring_n rows
+                    i0 = c - (ring_n + 2)
+                    skipped += i0 * (2 if ctl is not None else 1)
                 tl, ol = times.tolist(), obs.tolist()
                 el, il, fe = energy.tolist(), idx_all.tolist(), f_end.tolist()
-                for i in range(c):
+                for i in range(i0, c):
                     entries.append((tl[i], BLOCK_FINISH, nid,
                                     (il[i], ol[i], el[i])))
                     if ctl is not None:
                         entries.append((tl[i], TELEMETRY, nid,
                                         (il[i], ol[i], False)))
-                for i in range(1, lam + 1):
+                lo = max(1, i0)
+                skipped += min(lam, lo - 1)
+                for i in range(lo, lam + 1):
                     entries.append((tl[i - 1], BLOCK_START, nid,
                                     (il[i], fe[i])))
+        if skipped:
+            self.log.skip(skipped)
         if entries:
             entries.sort(key=lambda e: (e[0], e[1], e[2]))
             name_of = [st.spec.name for st in self.nodes]
-            self.log.extend((t, KIND_NAMES[k], name_of[n]) + d
-                            for t, k, n, d in entries)
+            self.log.extend([(t, KIND_NAMES[k], name_of[n]) + d
+                             for t, k, n, d in entries])
         for ch in chains:
             # next attempt prices ~2x what this one committed (floor keeps
             # short interludes from starving the next long stretch)

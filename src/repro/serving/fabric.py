@@ -350,9 +350,11 @@ class ServingFabric:
                 job.attempts = attempt
                 self.n_rejected += 1
                 decision, where = "reject", "-"
-        if eng.config.log_events:
+        if eng._log_on:
             eng.log.append((now, "job_arrival", where,
                             (job_id, job.arrival.tenant, decision, attempt)))
+        if eng._mx is not None:
+            eng._mx.on_job(now, job.arrival.tenant, decision)
         if cfg.shedding:
             self._shed_pass(eng, now)
         if self.prov is not None:
@@ -369,6 +371,8 @@ class ServingFabric:
         eng._extend_truth(truth_extra)
         ctl.append_blocks(name, job.block_idx)
         eng._extra_planned += len(job.block_idx)
+        if eng._mx is not None:
+            eng._mx.on_accept(now, eng._id_of[name], len(job.block_idx))
         job.status = "accepted"
         job.node = name
         nst = eng.nodes[eng._id_of[name]]
@@ -493,9 +497,12 @@ class ServingFabric:
         eng._extra_planned -= len(job.block_idx)
         job.status = "shed"
         self.n_shed += 1
-        if eng.config.log_events:
+        if eng._log_on:
             eng.log.append((now, "job_shed", job.node,
                             (job.arrival.job_id, job.arrival.tenant)))
+        if eng._mx is not None:
+            eng._mx.on_shed(now, eng._id_of[job.node], job.arrival.tenant,
+                            len(job.block_idx))
 
     # --- elastic provisioning ------------------------------------------------
     def _provision(self, eng, now: float) -> None:
@@ -526,8 +533,10 @@ class ServingFabric:
         self.parked.add(name)
         self._parked_since[name] = now
         self.provision_log.append((now, name, "park"))
-        if eng.config.log_events:
+        if eng._log_on:
             eng.log.append((now, "provision", name, ("park",)))
+        if eng._mx is not None:
+            eng._mx.on_provision(now, nid, "park")
 
     def _wake(self, eng, now: float, name: str) -> None:
         nid = eng._id_of[name]
@@ -542,8 +551,10 @@ class ServingFabric:
         st.switch_energy_j += self.prov.wake_energy_j
         self.wake_energy_j += self.prov.wake_energy_j
         self.provision_log.append((now, name, "wake"))
-        if eng.config.log_events:
+        if eng._log_on:
             eng.log.append((now, "provision", name, ("wake",)))
+        if eng._mx is not None:
+            eng._mx.on_provision(now, nid, "wake")
 
     # --- final accounting ----------------------------------------------------
     def finalize(self, rep: RuntimeReport) -> ServingReport:
@@ -683,6 +694,10 @@ def run_serving(
     if not config.log_events:
         raise ValueError("serving needs log_events=True — job outcomes "
                          "are read off the event log")
+    if config.event_log != "full":
+        raise ValueError("serving needs event_log='full' — finalize() "
+                         "replays the whole log for job outcomes (the "
+                         "ring/off modes cannot answer it)")
     schedule = generate_arrivals(arrivals) \
         if isinstance(arrivals, ArrivalSpec) else tuple(arrivals)
     cls = ServingRuntime if engine == "scalar" else VectorServingRuntime
