@@ -34,7 +34,7 @@ _ID_FIELDS = ("n", "deadline", "planner", "scenario", "app", "z", "nodes",
               "sampler_blocks", "kernel_blocks", "token_blocks",
               "cluster_blocks", "fault", "mode", "cap", "noise", "perturb",
               "engine", "mttr", "crash", "slack", "load", "mix", "slo",
-              "tenants", "metrics", "events", "stage")
+              "tenants", "metrics", "events", "stage", "mechanism")
 
 # per-section defaults, overriding --threshold: event-driven simulation
 # rows (one full engine run each) wobble more than pure planner throughput
@@ -45,6 +45,7 @@ SECTION_THRESHOLDS = {
     "failures": 0.3,
     "serving": 0.3,
     "obs": 0.3,
+    "obs_cf": 0.3,
 }
 
 

@@ -1,0 +1,147 @@
+"""Append bench blobs to a JSONL trend history and flag regressions.
+
+Usage::
+
+    python -m benchmarks.history append results/bench.json
+        [--history results/history.jsonl]
+    python -m benchmarks.history check
+        [--history results/history.jsonl] [--window 8]
+
+``append`` stamps one line per bench run — schema version, git sha,
+timestamp, and every ``blocks_per_s`` row keyed exactly as
+``benchmarks.compare`` prints it (``section/k=v,...``) — so the history
+survives row-shape churn: entries with a different ``schema_version``
+than the latest are simply skipped by ``check``.
+
+``check`` compares the newest entry against the *median* of up to
+``--window`` prior same-schema entries, metric by metric, reusing the
+per-section thresholds from ``benchmarks.compare`` (medians wash out the
+single-run wobble a pairwise diff is exposed to).  Exit 1 on any
+regression beyond its section threshold, exit 0 (with a note) when there
+is no baseline yet.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import subprocess
+import sys
+import time
+
+from benchmarks.compare import SECTION_THRESHOLDS, collect
+
+DEFAULT_HISTORY = os.path.join("results", "history.jsonl")
+
+
+def _key_str(key: tuple) -> str:
+    return key[0] + "/" + ",".join(f"{k}={v}" for k, v in key[1:])
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                              capture_output=True, text=True,
+                              check=True).stdout.strip()
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+def load_history(path: str) -> list:
+    entries = []
+    try:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    entries.append(json.loads(line))
+    except FileNotFoundError:
+        pass
+    return entries
+
+
+def append(bench_path: str, history_path: str) -> dict:
+    """Append one history line for ``bench_path``; returns the entry."""
+    with open(bench_path) as f:
+        blob = json.load(f)
+    entry = {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "schema_version": blob.get("schema_version", 1),
+        "git_sha": blob.get("git_sha") or _git_sha(),
+        "metrics": {_key_str(k): v for k, v in collect(blob).items()},
+    }
+    os.makedirs(os.path.dirname(history_path) or ".", exist_ok=True)
+    with open(history_path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+    return entry
+
+
+def check(history_path: str, window: int = 8,
+          default_threshold: float = 0.2) -> int:
+    """Latest entry vs the median of up to ``window`` same-schema priors."""
+    entries = load_history(history_path)
+    if not entries:
+        print(f"no history at {history_path} — nothing to check")
+        return 0
+    latest = entries[-1]
+    schema = latest.get("schema_version", 1)
+    priors = [e for e in entries[:-1]
+              if e.get("schema_version", 1) == schema][-window:]
+    if not priors:
+        print(f"no baseline yet for schema v{schema} "
+              f"({len(entries)} entr{'y' if len(entries) == 1 else 'ies'} "
+              f"total) — trend check passes vacuously")
+        return 0
+
+    regressions = []
+    checked = 0
+    for name, value in sorted(latest["metrics"].items()):
+        baseline = [e["metrics"][name] for e in priors
+                    if name in e.get("metrics", {})]
+        if not baseline:
+            print(f"# new metric: {name}")
+            continue
+        med = statistics.median(baseline)
+        section = name.split("/", 1)[0]
+        threshold = SECTION_THRESHOLDS.get(section, default_threshold)
+        checked += 1
+        change = (value - med) / med if med > 0 else 0.0
+        tag = ""
+        if med > 0 and value < med * (1.0 - threshold):
+            regressions.append((name, med, value, change, threshold))
+            tag = f"  <-- TREND REGRESSION (>{threshold:.0%})"
+        print(f"{name}: median({len(baseline)})={med:,.0f} -> {value:,.0f} "
+              f"blocks/s ({change:+.1%}){tag}")
+    if regressions:
+        print(f"\n{len(regressions)} trend regression(s) vs the "
+              f"{len(priors)}-run median baseline")
+        return 1
+    print(f"\nok: no trend regression across {checked} metrics "
+          f"(baseline: median of {len(priors)} run(s), schema v{schema})")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--history", default=DEFAULT_HISTORY,
+                    help=f"history JSONL path (default {DEFAULT_HISTORY})")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    ap_append = sub.add_parser("append", help="record one bench.json run")
+    ap_append.add_argument("bench", help="bench.json produced by "
+                                         "benchmarks.run --save")
+    ap_check = sub.add_parser("check", help="flag trend regressions")
+    ap_check.add_argument("--window", type=int, default=8,
+                          help="max prior runs in the baseline (default 8)")
+    args = ap.parse_args(argv)
+    if args.cmd == "append":
+        entry = append(args.bench, args.history)
+        print(f"appended {len(entry['metrics'])} metrics "
+              f"(schema v{entry['schema_version']}, sha {entry['git_sha']}) "
+              f"to {args.history}")
+        return 0
+    return check(args.history, window=args.window)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

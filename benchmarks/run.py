@@ -34,6 +34,16 @@ Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).  Sections:
              vector), recovery grid (crash time × MTTR × slack; recovery
              meets deadlines the migration-only baseline misses and never
              strands a block), zero-failure identity row
+  engine   — vectorized vs scalar event engine on the everything-on fleet
+             scenario: identical-report assert + blocks/sec per engine
+  serving  — open-loop serving fabric (repro.serving): admission/shedding
+             campaign grid, miss-rate bound, conservation asserts
+  obs      — observability layer (repro.obs): inline streaming-metrics
+             overhead, span-build and Chrome-export throughput
+  obs_cf   — counterfactual layer: per-mechanism ablation replays on BOTH
+             engines with bitwise Δ-ledger reconciliation, the DVFS-off
+             paper-headline assert, watchdog alert-stream identity
+             (scalar vs vector and run-to-run), run-diff self-check
   roofline — summary of results/roofline_sp.json (built from the dry-run)
   train    — tiny end-to-end LM training with the DV-DVFS controller
   serve    — batched decode with roofline-planned windows
@@ -51,7 +61,7 @@ import time
 
 # bumped whenever row shapes / section semantics change incompatibly;
 # benchmarks.compare refuses to diff blobs whose schemas differ
-SCHEMA_VERSION = 5
+SCHEMA_VERSION = 6
 
 
 def _git_sha() -> str:
@@ -797,6 +807,133 @@ def bench_obs(quick: bool = False):
     return rows
 
 
+def bench_obs_cf(quick: bool = False):
+    """Counterfactual replay, run-diff, and watchdog determinism.
+
+    Three asserted sub-grids on the engine section's everything-on fleet
+    scenario (small n — each mechanism costs whole replays on BOTH
+    engines):
+
+      * ablation grid — ``profile_mechanisms`` over both engines (report
+        identity asserted inside); every row's five channel deltas plus
+        the rational-space residual must sum BITWISE to the difference of
+        the two reports' own totals, and the DVFS-off row must reproduce
+        the paper's headline: DV-DVFS strictly below f_max busy energy at
+        equal deadline, deadline still met.
+      * watchdog identity — the alert stream must be bitwise-identical
+        scalar vs vector AND across two vector runs.
+      * run-diff self-check — ``diff_runs(r, r)`` empty; diffing the base
+        against the migration-off replay is non-empty and attributes
+        moved blocks.
+    """
+    import dataclasses
+    import math
+
+    from repro import obs
+    from repro.cluster.planner import plan_cluster_arrays
+    from repro.runtime import run_cluster
+
+    rows = []
+    n, k = (2_000, 8) if quick else (10_000, 8)
+    blocks, nodes, deadline, events, cfg = _fleet_scenario(n, k, 0.02)
+    plan = plan_cluster_arrays(blocks, nodes, deadline_s=deadline)
+    sc = obs.Scenario(plan=plan, truth=blocks, config=cfg, events=events)
+
+    # --- ablation grid: both engines, exact Δ reconciliation ----------------
+    t0 = time.perf_counter()
+    cf = obs.profile_mechanisms(sc)
+    cf_wall = time.perf_counter() - t0
+    n_runs = 2 * (1 + sum(r["changed"] for r in cf))
+    chans = ("busy_j", "idle_j", "switch_j", "wire_j", "failed_j")
+    for r in cf:
+        assert math.fsum([r[f"d_{c}"] for c in chans]
+                         + [r["residual_j"]]) == r["d_total_j"], \
+            f"Δ-ledger for {r['mechanism']} does not reconcile bitwise"
+        rows.append({"scenario": "ablation", "mechanism": r["mechanism"],
+                     "n": n, "nodes": k, "changed": r["changed"],
+                     "d_total_j": r["d_total_j"], "d_busy_j": r["d_busy_j"],
+                     "d_misses": r["d_misses"], "d_slack_s": r["d_slack_s"],
+                     "wall_s": cf_wall,
+                     "blocks_per_s": n * n_runs / cf_wall})
+        _row(f"obs_cf_{r['mechanism']}", cf_wall * 1e6 / (n * n_runs),
+             f"d_total_j={r['d_total_j']:+.1f};d_misses={r['d_misses']:+d};"
+             f"reconciled=True")
+
+    # --- the paper's headline as a counterfactual -----------------------------
+    # dedicated crash-free scenario (the everything-on grid's crashes can
+    # push the tight 1.15x base past its deadline at small n, which would
+    # make "at equal deadline" vacuous): DV-DVFS must meet the deadline
+    # AND pay strictly less busy energy than its own f_max replay
+    hd_plan = plan_cluster_arrays(blocks, nodes, deadline_s=deadline * 1.2)
+    hd = obs.Scenario(plan=hd_plan, truth=blocks, config=cfg)
+    t0 = time.perf_counter()
+    hd_base = hd.run(engine="vector")
+    hd_fmax = obs.ablate(hd, "dvfs", engines=("vector",))
+    hd_wall = time.perf_counter() - t0
+    d_busy = hd_fmax.total_energy_j - hd_base.total_energy_j
+    assert d_busy > 0.0, \
+        "DVFS-off ablation must show DV-DVFS strictly below f_max busy energy"
+    assert hd_base.deadline_met, "the DV-DVFS base run must meet its deadline"
+    improvement = d_busy / hd_fmax.total_energy_j
+    rows.append({"scenario": "dvfs_headline", "n": n, "nodes": k,
+                 "improvement_frac": improvement,
+                 "base_busy_j": hd_base.total_energy_j,
+                 "fmax_busy_j": hd_fmax.total_energy_j,
+                 "deadline_met": hd_base.deadline_met,
+                 "wall_s": hd_wall, "blocks_per_s": n * 2 / hd_wall})
+    _row("obs_cf_dvfs_headline", hd_wall * 1e6 / (n * 2),
+         f"improvement={improvement:.1%};deadline_met=True")
+
+    # --- watchdog determinism: scalar vs vector, two runs --------------------
+    wcfg = dataclasses.replace(cfg, log_events=True, event_log="full")
+    base_total = cf[0]["base_total_j"]    # every ledger row carries it
+
+    def wd_run(engine):
+        mx = obs.StreamingMetrics()
+        wd = obs.Watchdog(obs.standard_rules(
+            deadline, energy_budget_j=0.8 * base_total)).attach(mx)
+        run_cluster(plan, blocks,
+                    config=dataclasses.replace(wcfg, metrics=mx),
+                    events=events, engine=engine)
+        return wd.alerts
+
+    t0 = time.perf_counter()
+    alerts_v = wd_run("vector")
+    alerts_s = wd_run("scalar")
+    alerts_v2 = wd_run("vector")
+    wd_wall = time.perf_counter() - t0
+    assert alerts_v == alerts_s, \
+        "watchdog alert streams diverged between scalar and vector"
+    assert alerts_v == alerts_v2, \
+        "watchdog alert stream is not two-run deterministic"
+    rows.append({"scenario": "watchdog", "n": n, "nodes": k,
+                 "alerts": len(alerts_v), "wall_s": wd_wall,
+                 "blocks_per_s": n * 3 / wd_wall})
+    _row("obs_cf_watchdog", wd_wall * 1e6 / (n * 3),
+         f"alerts={len(alerts_v)};identical=True")
+
+    # --- run-diff: identity empty, ablated attributed ------------------------
+    sc_full = dataclasses.replace(sc, config=wcfg)
+    t0 = time.perf_counter()
+    rep_a = sc_full.run(engine="vector")
+    rep_b = sc_full.run(engine="vector")
+    assert obs.diff_runs(rep_a, rep_b).empty, \
+        "diff of two identical runs must be empty"
+    abl = obs.ablate(sc_full, "migration", engines=("vector",))
+    diff = obs.diff_runs(rep_a, abl)
+    diff_wall = time.perf_counter() - t0
+    assert not diff.empty and (diff.moved or diff.blocks), \
+        "migration-off diff must attribute changed work"
+    rows.append({"scenario": "diff", "stage": "diff_runs", "n": n,
+                 "nodes": k, "changed_blocks": len(diff.blocks),
+                 "moved": len(diff.moved), "wall_s": diff_wall,
+                 "blocks_per_s": n * 3 / diff_wall})
+    _row("obs_cf_diff", diff_wall * 1e6 / (n * 3),
+         f"changed_blocks={len(diff.blocks)};moved={len(diff.moved)};"
+         f"identity_empty=True")
+    return rows
+
+
 def bench_calibrate(quick: bool = False):
     """Telemetry-driven calibration (repro.calibrate): the
     estimate->plan->measure loop.
@@ -1406,6 +1543,7 @@ def main() -> None:
         "runtime": (bench_runtime, False),
         "engine": (lambda: bench_engine(quick=args.quick), False),
         "obs": (lambda: bench_obs(quick=args.quick), False),
+        "obs_cf": (lambda: bench_obs_cf(quick=args.quick), False),
         "calibrate": (lambda: bench_calibrate(quick=args.quick), False),
         "failures": (lambda: bench_failures(quick=args.quick), False),
         "serving": (lambda: bench_serving(quick=args.quick), False),

@@ -17,7 +17,13 @@
    burst: with every job blindly accepted the backlog snowballs and BOTH
    tenants' SLOs collapse; with admission control + SLO-aware shedding the
    damage is contained to the bursting tenant's own rejected jobs and the
-   steady tenant never misses.
+   steady tenant never misses,
+6. ask the run itself what each mechanism bought: deterministic
+   counterfactual replays ablate DVFS / migration / the power cap /
+   actuation one at a time and ledger the exact per-channel energy delta
+   (the DVFS row IS the paper's headline, measured on this very run), and
+   an SRE-style burn-rate watchdog replays the same run's metrics into a
+   deterministic alert stream.
 
 Run:  PYTHONPATH=src python examples/cluster_sim.py
 """
@@ -224,9 +230,64 @@ def overload_serving_demo():
           f"{guarded.n_rejected} rejects, the steady tenant keeps its SLO")
 
 
+def counterfactual_demo():
+    print("=== 6) Counterfactuals: what did each mechanism buy, exactly ===")
+    import dataclasses
+
+    from repro.obs import (Scenario, Watchdog, mechanism_columns,
+                           profile_mechanisms, standard_rules)
+    from repro.runtime import ActuationModel
+
+    ladder = FrequencyLadder((0.6, 0.8, 1.0))
+    blocks = [BlockInfo(i, 5.0, records=5000.0) for i in range(24)]
+    nodes = [NodeSpec("n0", speed=1.0, ladder=ladder),
+             NodeSpec("n1", speed=0.8, ladder=ladder),
+             NodeSpec("n2", speed=1.25, ladder=ladder)]
+    mk = max(sum(b.est_time_fmax for b in g) / n.speed
+             for g, n in zip(assign_blocks(blocks, nodes), nodes))
+    deadline = mk * 1.35
+    plan = plan_cluster(blocks, nodes, deadline, assignment="lpt")
+    n0 = plan.node_plans[0]
+    events = [SlowdownEvent("n0", after_block=len(n0.blocks) // 2 - 1,
+                            factor=2.0)]
+    cfg = RuntimeConfig(online=True, migrate=True, ewma_alpha=0.7,
+                        replan_threshold=0.1, power_cap_w=400.0,
+                        actuation=ActuationModel(latency_s=0.05,
+                                                 switch_energy_j=2.0),
+                        migration=MigrationModel(latency_s_per_block=0.5,
+                                                 energy_j_per_record=0.005))
+    sc = Scenario(plan=plan, truth=blocks, config=cfg, events=tuple(events),
+                  est_blocks=blocks)
+
+    # each row: the identical run replayed with ONE mechanism off, on both
+    # engines (report identity asserted); positive delta = the ablated run
+    # pays more, i.e. the mechanism was saving that much on THIS run
+    rows = profile_mechanisms(sc)
+    print("  per-mechanism exact ledger (ablated minus base):")
+    print(format_table([r for r in rows if r["changed"]],
+                       mechanism_columns(), indent="  "))
+    dvfs = next(r for r in rows if r["mechanism"] == "dvfs")
+    print(f"  the dvfs row is the paper's claim on this very run: pinning "
+          f"f_max costs {dvfs['d_busy_j']:+.0f} J of busy energy")
+    mig = next(r for r in rows if r["mechanism"] == "migration")
+    if mig["d_total_j"] == 0.0:
+        print("  the all-zero migration row is a finding too: the clock-up "
+              "absorbed the 2x drift, so migration bought nothing here")
+
+    # the same run, watched: burn-rate rules over the streamed metrics
+    mx = StreamingMetrics()
+    wd = Watchdog(standard_rules(deadline)).attach(mx)
+    sc.run(engine="vector", metrics=mx)
+    print(f"  watchdog ({len(wd.alerts)} alerts, deterministic):")
+    for a in wd.alerts[:4]:
+        print(f"      t={a.time:5.1f}s  [{a.severity}] {a.rule}: "
+              f"burn {a.value:.2f}x over {a.window_s:.1f}s window")
+
+
 if __name__ == "__main__":
     offline_demo()
     online_demo()
     migration_demo()
     crash_recovery_demo()
     overload_serving_demo()
+    counterfactual_demo()

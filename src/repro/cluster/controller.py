@@ -472,6 +472,23 @@ class OnlineReplanner:
         return self.predicted_finish(node_name, at_fmax=True) \
             > self.deadline_s * (1.0 - margin) + 1e-9
 
+    def on_alert(self, alert) -> int:
+        """Watchdog hook: a firing deadline-risk alert forces an immediate
+        tail re-plan of every up node with queued work that is predicted
+        to miss — the existing replan machinery, triggered by the burn
+        rate instead of waiting for the EWMA drift threshold.  Returns the
+        number of nodes re-planned.  Alerts on other signals are ignored
+        (energy/cap pressure has no replan lever here).
+        """
+        if getattr(alert, "signal", "deadline_risk") != "deadline_risk":
+            return 0
+        n = 0
+        for name, st in self._nodes.items():
+            if st.up and st.queue and self.predicted_miss(name):
+                self._replan_node(name, st)
+                n += 1
+        return n
+
     def move_block(self, src: str, dst: str, block_index: int) -> None:
         """Move one QUEUED block from ``src``'s queue to the tail of ``dst``.
 

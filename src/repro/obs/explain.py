@@ -36,7 +36,7 @@ from __future__ import annotations
 import math
 from fractions import Fraction
 
-from repro.obs.spans import build_spans
+from repro.obs.spans import build_spans, require_full_log
 
 __all__ = ["explain_miss", "explain_energy"]
 
@@ -155,6 +155,7 @@ def explain_miss(report, job_id: int | None = None, node: str | None = None,
     if (job_id is None) == (node is None):
         raise ValueError("pass exactly one of job_id= or node=")
     runtime = getattr(report, "runtime", report)
+    require_full_log(runtime)
     if spans is None:
         spans = build_spans(runtime.event_log)
 
@@ -227,6 +228,7 @@ def explain_energy(report, node: str | None = None, *, specs=None) -> dict:
     ``report.idle_energy_j``.
     """
     runtime = getattr(report, "runtime", report)
+    require_full_log(runtime)
     if node is None:
         ch = {"busy_j": runtime.total_energy_j,
               "idle_j": runtime.idle_energy_j,

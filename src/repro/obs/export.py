@@ -14,17 +14,22 @@ dependency): it returns a list of problem strings, empty when the
 document is well-formed — CI's obs-smoke job asserts on it.
 
 ``to_prometheus`` renders a ``StreamingMetrics`` snapshot (or a bare
-``RuntimeReport``) in the Prometheus text exposition format, and
-``to_jsonl`` streams the raw event log one JSON object per line.
+``RuntimeReport``) in the Prometheus text exposition format —
+``validate_prometheus`` is its structural checker (HELP/TYPE pairing,
+name/label syntax, escape and float formatting, series uniqueness), the
+text-format twin of ``validate_chrome_trace`` — and ``to_jsonl`` streams
+the raw event log one JSON object per line.
 """
 from __future__ import annotations
 
 import json
+import math
+import re
 
 from repro.obs.spans import Span, build_job_spans, build_spans
 
 __all__ = ["to_chrome_trace", "write_chrome_trace", "validate_chrome_trace",
-           "to_prometheus", "to_jsonl", "write_jsonl"]
+           "to_prometheus", "validate_prometheus", "to_jsonl", "write_jsonl"]
 
 _US = 1e6
 
@@ -215,6 +220,116 @@ def to_prometheus(source, *, prefix: str = "repro") -> str:
                      ("switches", rep.n_switches)):
             sample("events_total", v, kind=k)
     return "\n".join(lines) + "\n"
+
+
+_PROM_NAME = re.compile(r"[a-zA-Z_:][a-zA-Z0-9_:]*\Z")
+_PROM_LABEL = re.compile(r"[a-zA-Z_][a-zA-Z0-9_]*\Z")
+_PROM_KINDS = frozenset({"counter", "gauge", "histogram", "summary",
+                         "untyped"})
+_PROM_SAMPLE = re.compile(
+    r"([a-zA-Z_:][a-zA-Z0-9_:]*)(?:\{(.*)\})?\s+(\S+)\s*\Z")
+
+
+def _prom_parse_labels(body: str, where: str, bad: list):
+    """Parse the inside of a ``{...}`` label block; appends problems."""
+    labels = []
+    i, n = 0, len(body)
+    while i < n:
+        j = body.find('="', i)
+        if j < 0:
+            bad.append(f"{where}: malformed label block {body!r}")
+            return labels
+        key = body[i:j]
+        if not _PROM_LABEL.match(key):
+            bad.append(f"{where}: bad label name {key!r}")
+        k = j + 2
+        while k < n:
+            c = body[k]
+            if c == "\\":
+                if k + 1 >= n or body[k + 1] not in ('\\', '"', 'n'):
+                    bad.append(f"{where}: bad escape in label {key!r}")
+                k += 2
+                continue
+            if c == '"':
+                break
+            k += 1
+        else:
+            bad.append(f"{where}: unterminated value for label {key!r}")
+            return labels
+        labels.append((key, body[j + 2:k]))
+        i = k + 1
+        if i < n:
+            if body[i] != ",":
+                bad.append(f"{where}: junk after label {key!r}")
+                return labels
+            i += 1
+    return labels
+
+
+def validate_prometheus(text) -> list:
+    """Structural check of a Prometheus text exposition document.  Returns
+    a list of problem strings — empty means well-formed.  Checks HELP/TYPE
+    pairing and ordering, metric/label name syntax, label-value escaping,
+    float formatting, counter non-negativity, and series uniqueness."""
+    bad: list = []
+    if not isinstance(text, str):
+        return ["document is not a string"]
+    if text and not text.endswith("\n"):
+        bad.append("missing trailing newline")
+    helped: set = set()
+    typed: dict = {}
+    seen: set = set()
+    for i, line in enumerate(text.splitlines()):
+        where = f"line {i + 1}"
+        if not line.strip():
+            continue
+        if line.startswith("#"):
+            parts = line.split(None, 3)
+            if len(parts) < 3 or parts[1] not in ("HELP", "TYPE"):
+                continue                     # free-form comment: legal
+            name = parts[2]
+            if not _PROM_NAME.match(name):
+                bad.append(f"{where}: bad metric name {name!r}")
+                continue
+            if parts[1] == "HELP":
+                if name in helped:
+                    bad.append(f"{where}: duplicate HELP for {name}")
+                helped.add(name)
+            else:
+                kind = parts[3].strip() if len(parts) > 3 else ""
+                if kind not in _PROM_KINDS:
+                    bad.append(f"{where}: bad TYPE kind {kind!r} for {name}")
+                if name not in helped:
+                    bad.append(f"{where}: TYPE for {name} without a "
+                               "preceding HELP")
+                if name in typed:
+                    bad.append(f"{where}: duplicate TYPE for {name}")
+                typed[name] = kind
+            continue
+        m = _PROM_SAMPLE.match(line)
+        if m is None:
+            bad.append(f"{where}: unparsable sample {line!r}")
+            continue
+        name, lab_body, value = m.groups()
+        base = re.sub(r"_(bucket|sum|count)\Z", "", name)
+        if name not in typed and base not in typed:
+            bad.append(f"{where}: sample for undeclared metric {name}")
+        labels = (_prom_parse_labels(lab_body, where, bad)
+                  if lab_body is not None else [])
+        try:
+            v = float(value)
+        except ValueError:
+            bad.append(f"{where}: unparsable value {value!r}")
+            continue
+        kind = typed.get(name, typed.get(base))
+        if kind == "counter" and not math.isnan(v) and v < 0:
+            bad.append(f"{where}: negative counter sample {name} {v!r}")
+        series = (name, tuple(sorted(labels)))
+        if series in seen:
+            bad.append(f"{where}: duplicate series {name}"
+                       f"{dict(labels) or ''}")
+        seen.add(series)
+    return bad
 
 
 def to_jsonl(event_log):

@@ -59,6 +59,11 @@ class StreamingMetrics:
             "repairs", "sheds", "late_blocks", "jobs_accepted",
             "jobs_rejected", "jobs_deferred", "wakes", "parks")}
         self.report = None            # sealed by on_run_end
+        self.power_cap_w = None       # read off the engine config at bind
+        self.tenant_counters: dict = {}   # tenant -> decision counts
+        self.tenant_slo: dict = {}        # tenant -> last seen SLO seconds
+        self._tenant_bins: dict = {}      # tenant -> per-bin reject+shed count
+        self._subs: list = []
         self._n = 0
         self._bound = False
 
@@ -70,6 +75,8 @@ class StreamingMetrics:
             raise RuntimeError("a StreamingMetrics instance feeds exactly "
                                "one run — construct a fresh one")
         self._bound = True
+        self.power_cap_w = getattr(getattr(eng, "config", None),
+                                   "power_cap_w", None)
         self.node_names = tuple(st.spec.name for st in eng.nodes)
         n = self._n = len(self.node_names)
         self.deadline_s = float(eng.deadline_s)
@@ -111,6 +118,12 @@ class StreamingMetrics:
         self._ivb: list = []              # pending (nid, t, obs, e) commits
         self._ivb_n = 0
 
+    def subscribe(self, sub) -> None:
+        """Register an inline consumer (e.g. ``Watchdog``).  Subscribers
+        get ``on_seal(metrics, report)`` exactly once, after the final
+        flush — the hot feeds never pay a per-event callback."""
+        self._subs.append(sub)
+
     def _need_bound(self):
         if not self._bound:
             raise RuntimeError("metrics not bound to a run yet "
@@ -129,6 +142,8 @@ class StreamingMetrics:
             self._uC = np.zeros((self._n, B + 1))
             self._depth_bins = self._fold(self._depth_bins)
             self._rates = self._fold(self._rates)
+            for k in self._tenant_bins:
+                self._tenant_bins[k] = self._fold(self._tenant_bins[k])
             self._H *= 2.0
 
     def _fold(self, a: np.ndarray) -> np.ndarray:
@@ -375,15 +390,32 @@ class StreamingMetrics:
         self.counters["repairs"] += 1
 
     # --- serving feed --------------------------------------------------------
-    def on_job(self, now, tenant, decision) -> None:
+    def _tenant_pressure(self, tenant, now) -> None:
+        # per-tenant SLO-denying outcome (reject or shed) binned in time —
+        # the watchdog's tenant burn-rate input
+        arr = self._tenant_bins.get(tenant)
+        if arr is None:
+            arr = self._tenant_bins[tenant] = np.zeros(self.bins)
+        arr[self._bin1(now)] += 1.0
+
+    def on_job(self, now, tenant, decision, slo_s=None) -> None:
         key = {"accept": "jobs_accepted", "reject": "jobs_rejected",
                "defer": "jobs_deferred"}.get(decision)
         if key is not None:
             self.counters[key] += 1
+        tc = self.tenant_counters.get(tenant)
+        if tc is None:
+            tc = self.tenant_counters[tenant] = {
+                "accept": 0, "reject": 0, "defer": 0, "shed": 0}
+        if decision in tc:
+            tc[decision] += 1
+        if slo_s is not None:
+            self.tenant_slo[tenant] = float(slo_s)
         if decision == "reject":
             if now > self._H:
                 self._grow_to(now)
             self._rates[4, self._bin1(now)] += 1.0
+            self._tenant_pressure(tenant, now)
 
     def on_accept(self, now, nid, nblocks) -> None:
         self._depth_now[nid] += float(nblocks)
@@ -393,12 +425,16 @@ class StreamingMetrics:
 
     def on_shed(self, now, nid, tenant, nblocks) -> None:
         self.counters["sheds"] += 1
+        tc = self.tenant_counters.get(tenant)
+        if tc is not None:
+            tc["shed"] += 1
         self._depth_now[nid] -= float(nblocks)
         if now > self._H:
             self._grow_to(now)
         b = self._bin1(now)
         self._depth_bins[b] -= float(nblocks)
         self._rates[3, b] += 1.0
+        self._tenant_pressure(tenant, now)
 
     def on_provision(self, now, nid, what) -> None:
         self.counters["wakes" if what == "wake" else "parks"] += 1
@@ -441,6 +477,8 @@ class StreamingMetrics:
             end = max(self._end_t, float(report.makespan_s), self._last_pt)
             self._pp.append((end, self._last_pw))
         self._flush()
+        for sub in self._subs:
+            sub.on_seal(self, report)
 
     # --- queries -------------------------------------------------------------
     def edges(self) -> np.ndarray:
@@ -475,6 +513,16 @@ class StreamingMetrics:
         self._flush()
         binw = self._H / self.bins
         return self.edges(), self._rates[_RATE_KINDS.index(kind)] / binw
+
+    def tenant_timeline(self, tenant: str):
+        """(bin edges, per-bin count of SLO-denying outcomes — rejects plus
+        sheds — for one tenant).  Zeros for an unseen tenant."""
+        self._need_bound()
+        self._flush()
+        arr = self._tenant_bins.get(tenant)
+        if arr is None:
+            arr = np.zeros(self.bins)
+        return self.edges(), arr.copy()
 
     def energy_split(self) -> dict:
         """busy / idle / switch / wire / failed joules.  The idle and

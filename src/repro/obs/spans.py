@@ -30,7 +30,28 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["Span", "build_spans", "build_job_spans", "flatten"]
+__all__ = ["Span", "build_spans", "build_job_spans", "flatten",
+           "require_full_log"]
+
+
+def require_full_log(report) -> None:
+    """Raise unless ``report`` carries a replayable (full-mode) event log.
+
+    Reports produced with ``RuntimeConfig(event_log="ring:N" | "off")`` (or
+    ``log_events=False``) truncate history; computing spans or attribution
+    from them would silently blame the surviving tail.  ``ServingReport``
+    wrappers are unwrapped; objects without an ``event_log_mode`` field
+    (raw log tuples, sinks) pass through and fall back to the older
+    ``dropped`` check in ``build_spans``.
+    """
+    runtime = getattr(report, "runtime", report)
+    mode = getattr(runtime, "event_log_mode", "full")
+    if mode != "full":
+        dropped = getattr(runtime, "events_dropped", 0)
+        raise ValueError(
+            f"report's event log is not replayable: event_log={mode!r} "
+            f"(events_dropped={dropped}) — re-run with "
+            "RuntimeConfig(log_events=True, event_log='full')")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,9 +115,14 @@ class _OpenBlock:
 def build_spans(event_log) -> dict:
     """``{node_name: (root spans, start-sorted)}`` from a full event log.
 
-    Raises ``ValueError`` on a ring-truncated log artifact
-    (``EventLogSink`` with drops) — span reconstruction needs history.
+    Accepts a raw event log (tuple of rows or ``EventLogSink``) or a whole
+    ``RuntimeReport`` / ``ServingReport``.  Raises ``ValueError`` on any
+    ring-truncated or disabled log (``require_full_log``) — span
+    reconstruction needs history.
     """
+    if hasattr(event_log, "event_log") or hasattr(event_log, "runtime"):
+        require_full_log(event_log)
+        event_log = getattr(event_log, "runtime", event_log).event_log
     dropped = getattr(event_log, "dropped", 0)
     if dropped:
         raise ValueError(f"event log dropped {dropped} rows (ring mode) — "

@@ -180,6 +180,9 @@ class RuntimeReport:
     # is on — the piecewise-constant power track the exporters draw
     power_samples: tuple = ()
     events_dropped: int = 0          # ring-evicted rows (0 for full/off)
+    # how the event log was captured: "full", "ring:N", or "off" — the
+    # flight-recorder guard (spans/attribution refuse truncated logs)
+    event_log_mode: str = "full"
 
     def improvement_vs(self, other) -> float:
         """Fractional busy-energy improvement of self over ``other``."""
@@ -1027,6 +1030,8 @@ class ClusterRuntime:
             power_samples=tuple(self.ledger.samples),
             events_dropped=(self.log.dropped
                             if isinstance(self.log, EventLogSink) else 0),
+            event_log_mode=(self.config.event_log
+                            if self.config.log_events else "off"),
         )
         if self._mx is not None:
             self._mx.on_run_end(rep)

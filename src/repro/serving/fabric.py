@@ -354,7 +354,8 @@ class ServingFabric:
             eng.log.append((now, "job_arrival", where,
                             (job_id, job.arrival.tenant, decision, attempt)))
         if eng._mx is not None:
-            eng._mx.on_job(now, job.arrival.tenant, decision)
+            eng._mx.on_job(now, job.arrival.tenant, decision,
+                           slo_s=job.arrival.deadline_s - job.arrival.time)
         if cfg.shedding:
             self._shed_pass(eng, now)
         if self.prov is not None:
